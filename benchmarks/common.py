@@ -1,0 +1,53 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core.buffersim import (GFPCycleModel, na_edge_stream_original,
+                                  simulate_na)
+from repro.core.restructure import restructure
+from repro.hetero import make_dataset
+
+# HiHGNN-flavoured backend constants (Table 3): 1 GHz, 512 GB/s HBM,
+# 32x32 systolic array -> 1024 MACs/cycle.
+CYCLE_MODEL = GFPCycleModel(macs_per_cycle=1024.0, bytes_per_cycle=512.0)
+FEATURE_DIM = 64  # paper: hidden units {64}
+BUFFER_BYTES = 64 * 1024  # NA-Buf share per lane/semantic-graph working set
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.3f},{derived}"
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6  # us
+
+
+def na_streams(rel):
+    """(original, restructured) source-feature streams + edge streams."""
+    rg = restructure(rel)
+    o = np.lexsort((rel.src, rel.dst))
+    orig = (rel.src[o], rel.dst[o])
+    rest = rg.scheduled_edges()
+    return orig, rest, rg
+
+
+def na_macs(rel, dim: int = FEATURE_DIM) -> int:
+    """NA sub-stage MACs: one weighted MAC per edge per feature element."""
+    return rel.num_edges * dim
+
+
+def gfp_cycles(rel, stream_src, dim: int = FEATURE_DIM,
+               cap: int = BUFFER_BYTES) -> Dict[str, float]:
+    stats = simulate_na(stream_src, dim, cap, num_rows=rel.num_src)
+    macs = na_macs(rel, dim)
+    cycles = CYCLE_MODEL.cycles(macs, stats.dram_bytes)
+    return {"cycles": cycles, "dram": stats.dram_bytes,
+            "hit": stats.hit_rate, "macs": macs}

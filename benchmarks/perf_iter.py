@@ -1,0 +1,90 @@
+"""§Perf hillclimb driver: run variants of the three selected cells and
+log hypothesis -> change -> before/after (EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python -m benchmarks.perf_iter <cellA|cellB|cellC>
+"""
+import json
+import os
+import sys
+
+
+def _roofline(arch, shape, out, **kw):
+    # import inside so XLA_FLAGS from dryrun take effect first
+    from repro.launch.dryrun import roofline_cell
+
+    res = roofline_cell(arch, shape, **kw)
+    os.makedirs("results/perf", exist_ok=True)
+    with open(f"results/perf/{out}.json", "w") as f:
+        json.dump(res, f, indent=2, default=str)
+    rf = res.get("roofline", {})
+    print(f"{out}: peak={res.get('proof',{}).get('peak_hbm_gib','-')}GiB "
+          f"comp={rf.get('t_compute_s',0):.4f} mem={rf.get('t_memory_s',0):.4f} "
+          f"coll={rf.get('t_collective_s',0):.4f} frac={rf.get('roofline_fraction',0):.3f}")
+    return res
+
+
+def cell_a():
+    """jamba train_4k: collective-bound. Lever: microbatch count (FSDP
+    all-gathers scale with µb); bf16 grad accumulation for memory."""
+    _roofline("jamba-v0.1-52b", "train_4k", "jamba_mb4", microbatches=4)
+    _roofline("jamba-v0.1-52b", "train_4k", "jamba_mb1", microbatches=1)
+
+
+def cell_a2():
+    _roofline("jamba-v0.1-52b", "train_4k", "jamba_mb4_bf16acc",
+              microbatches=4, grad_accum_dtype="bfloat16")
+
+
+def cell_b():
+    """qwen2 prefill_32k: compute-bound. Lever: 2D-blocked attention with
+    causal block skips (chunked2d)."""
+    _roofline("qwen2-vl-7b", "prefill_32k", "qwen2_prefill_base")
+    _roofline("qwen2-vl-7b", "prefill_32k", "qwen2_prefill_2d",
+              attn_impl="chunked2d")
+
+
+def cell_b_gemma():
+    """gemma2 prefill (local+global): window skips should be dramatic."""
+    _roofline("gemma2-2b", "prefill_32k", "gemma2_prefill_base")
+    _roofline("gemma2-2b", "prefill_32k", "gemma2_prefill_2d",
+              attn_impl="chunked2d")
+
+
+def cell_c():
+    """Paper-technique cell: restructuring-policy sweep on the NA meters."""
+    import numpy as np
+
+    from repro.core.buffersim import na_edge_stream_original, simulate_na
+    from repro.core.restructure import restructure
+    from repro.hetero import make_dataset
+    from repro.kernels.seg_sum import pack_edge_blocks
+
+    rows = []
+    for ds in ("ACM", "DBLP", "IMDB"):
+        g = make_dataset(ds)
+        rel = max(g.relations.values(), key=lambda r: r.num_edges)
+        variants = {"orig": None}
+        for aff in ("none", "minsrc", "barycenter"):
+            variants[aff] = restructure(rel, affinity=aff)
+        for name, rg in variants.items():
+            if rg is None:
+                s = na_edge_stream_original(rel.src, rel.dst)
+                d = rel.dst[np.lexsort((rel.src, rel.dst))]
+            else:
+                s, d = rg.scheduled_edges()
+            st = simulate_na(s, 64, 64 * 1024, num_rows=rel.num_src)
+            pk = pack_edge_blocks(s, d, rel.num_src, rel.num_dst)
+            rows.append({
+                "dataset": ds, "variant": name, "hit": round(st.hit_rate, 4),
+                "dram_mb": round(st.dram_bytes / 2**20, 2),
+                "kernel_blocks": pk.num_blocks,
+                "kernel_hbm_mb": round(pk.hbm_feature_bytes(64) / 2**20, 1),
+            })
+            print(rows[-1])
+    os.makedirs("results/perf", exist_ok=True)
+    json.dump(rows, open("results/perf/cell_c.json", "w"), indent=2)
+
+
+if __name__ == "__main__":
+    {"cellA": cell_a, "cellA2": cell_a2, "cellB": cell_b,
+     "cellBg": cell_b_gemma, "cellC": cell_c}[sys.argv[1]]()

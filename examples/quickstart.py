@@ -1,0 +1,32 @@
+"""Quickstart: the paper's full pipeline on synthetic ACM in ~30 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.hgnn import HGNN, HGNNConfig
+from repro.core.hgnn.models import graphs_from_sgb
+from repro.core.sgb import build_semantic_graphs
+from repro.hetero import make_dataset
+
+# 1) heterogeneous graph (synthetic ACM, Table-2-faithful)
+g = make_dataset("ACM", scale=0.5)
+print(f"HetG: {g.num_vertices}  edges={g.total_edges()}")
+
+# 2) SGB stage with the paper's Callback Trie Tree planner
+targets = ["APA", "PAP", "PSP", "APSPA"]
+res = build_semantic_graphs(g, targets, planner="ctt")
+print(f"SGB: {len(res.per_step)} compositions, "
+      f"{res.cost.macs / 1e6:.1f} M MACs, {res.wall_seconds * 1e3:.0f} ms")
+
+# 3) GFP stage: Simple-HGN over the (restructured) semantic graphs
+graphs = graphs_from_sgb(g, res.graphs, targets, restructured=True)
+cfg = HGNNConfig(model="shgn", hidden=64, num_layers=2, num_classes=3,
+                 target_type="P")
+model = HGNN(cfg, g.feature_dims, g.num_vertices, sorted(targets))
+params = model.init(jax.random.key(0))
+feats = {t: jnp.asarray(x) for t, x in g.features.items()}
+logits = model.apply(params, feats, graphs)
+print(f"GFP: logits {logits.shape}, "
+      f"prediction histogram {jnp.bincount(logits.argmax(-1), length=3)}")

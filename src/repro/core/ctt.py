@@ -1,0 +1,159 @@
+"""Callback Trie Tree (CTT) — paper §4.2.
+
+The CTT is a trie over metapath strings whose level-1 nodes are vertex
+types; every node representing a materialized metapath carries a *callback
+edge* pointing back to the level-1 node of its last vertex type.  Walking
+the trie with the hardware Matcher semantics (§4.2.2) decomposes a candidate
+metapath into a chain of previously-materialized segments that overlap by
+exactly one vertex type — the "optimal generation list" the frontend hands
+back to the CPU.
+
+This is the host-side (compile-time) realisation of the 5 KB CTT buffer +
+Matcher FSM: on TPU the *plan* is what matters; each emitted segment pair
+becomes one relation-composition launched on device (see sgb.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+
+@dataclasses.dataclass
+class _Node:
+    """One CTT node. ``vtype`` is the vertex type this node matches.
+
+    ``terminal`` marks that the metapath spelled root->here is materialized
+    (stored in the CTT buffer).  ``callback`` is the green edge of Fig. 6:
+    it always points at the level-1 node with the same vertex type.
+    """
+
+    vtype: str
+    depth: int
+    children: Dict[str, "_Node"] = dataclasses.field(default_factory=dict)
+    terminal: bool = False
+    callback: Optional["_Node"] = None
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"_Node({self.vtype}@{self.depth}, term={self.terminal})"
+
+
+class CallbackTrieTree:
+    """Faithful CTT: init with one-hop metapaths, decompose via Matcher walk.
+
+    The Matcher walk (hardware §4.2.2): the candidate metapath sits in the
+    Candidate Register; the CTT pointer starts at level 1 and descends while
+    the next candidate character has a child.  When it cannot descend
+    further (Next P. empty at a terminal, or no matching child), the longest
+    *terminal* node passed on the way down is emitted as a segment and the
+    callback edge teleports the pointer back to level 1 at the segment's
+    last vertex type.  Segments therefore overlap by one vertex type.
+    """
+
+    def __init__(self, one_hop: Iterable[str]):
+        self.root = _Node("", 0)
+        self._size = 0
+        for rel in sorted(set(one_hop)):
+            if len(rel) != 2:
+                raise ValueError(f"one-hop metapath must have 2 types, got {rel!r}")
+            self.insert(rel)
+
+    # -- construction ------------------------------------------------------
+    def _level1(self, vtype: str) -> _Node:
+        node = self.root.children.get(vtype)
+        if node is None:
+            node = _Node(vtype, 1)
+            node.callback = node  # level-1 callback is itself
+            self.root.children[vtype] = node
+        return node
+
+    def insert(self, metapath: str) -> None:
+        """Store a materialized metapath (the CTT buffer write of §4.2.2)."""
+        if len(metapath) < 2:
+            raise ValueError("metapath needs at least one hop")
+        node = self._level1(metapath[0])
+        for ch in metapath[1:]:
+            nxt = node.children.get(ch)
+            if nxt is None:
+                nxt = _Node(ch, node.depth + 1)
+                # callback edge -> the level-1 node of this vertex type
+                nxt.callback = self._level1(ch)
+                node.children[ch] = nxt
+            node = nxt
+        if not node.terminal:
+            node.terminal = True
+            self._size += 1
+
+    def __contains__(self, metapath: str) -> bool:
+        node = self.root
+        for ch in metapath:
+            node = node.children.get(ch)
+            if node is None:
+                return False
+        return node.terminal
+
+    def __len__(self) -> int:
+        return self._size
+
+    # -- matcher walk ------------------------------------------------------
+    def longest_prefix(self, candidate: str) -> Optional[str]:
+        """Longest materialized metapath that is a prefix of ``candidate``."""
+        node = self.root
+        best = None
+        for i, ch in enumerate(candidate):
+            node = node.children.get(ch)
+            if node is None:
+                break
+            if node.terminal:
+                best = candidate[: i + 1]
+        return best
+
+    def decompose(self, metapath: str) -> List[str]:
+        """Matcher walk: split ``metapath`` into materialized segments.
+
+        Returns segments overlapping by one vertex type, e.g. with the trie
+        of Fig. 6(c): ``decompose("APSPA") == ["APS", "SP", "PA"]``.
+        Raises if some hop has no materialized relation (invalid metapath).
+        """
+        if metapath in self:
+            return [metapath]
+        segs: List[str] = []
+        pos = 0
+        n = len(metapath)
+        while pos < n - 1:
+            seg = self.longest_prefix(metapath[pos:])
+            if seg is None or len(seg) < 2:
+                raise KeyError(
+                    f"no materialized segment for {metapath[pos:]!r} "
+                    f"(missing relation {metapath[pos:pos+2]!r}?)"
+                )
+            segs.append(seg)
+            # callback edge: continue from the segment's last vertex type
+            pos += len(seg) - 1
+        return segs
+
+    def materialized(self) -> List[str]:
+        """All materialized metapaths (depth-first)."""
+        out: List[str] = []
+
+        def walk(node: _Node, prefix: str) -> None:
+            if node.terminal:
+                out.append(prefix)
+            for ch in sorted(node.children):
+                walk(node.children[ch], prefix + ch)
+
+        for ch in sorted(self.root.children):
+            walk(self.root.children[ch], ch)
+        return out
+
+    # -- buffer accounting (Table 3: 5 KB CTT buffer) ----------------------
+    def nbytes(self) -> int:
+        """Rough CTT buffer footprint: one entry per node (type byte,
+        next ptr, callback ptr, terminal flag ~ 8 B) — sanity check against
+        the paper's 5 KB budget."""
+        count = 0
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            count += 1
+            stack.extend(node.children.values())
+        return count * 8

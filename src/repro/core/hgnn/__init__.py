@@ -1,0 +1,20 @@
+"""HGNN models (RGCN / RGAT / Simple-HGN) with the FP -> NA -> SF stages."""
+from repro.core.hgnn.layers import (
+    edge_softmax_weights,
+    feature_projection,
+    na_mean,
+    na_attention,
+    semantic_fusion,
+)
+from repro.core.hgnn.models import HGNN, HGNNConfig, SemanticGraphBatch
+
+__all__ = [
+    "HGNN",
+    "HGNNConfig",
+    "SemanticGraphBatch",
+    "edge_softmax_weights",
+    "feature_projection",
+    "na_mean",
+    "na_attention",
+    "semantic_fusion",
+]

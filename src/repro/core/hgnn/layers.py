@@ -1,0 +1,85 @@
+"""GFP sub-stage primitives: Feature Projection, Neighbor Aggregation,
+Semantic Fusion — pure JAX, layout-agnostic.
+
+All NA primitives take global (src, dst) edge index arrays.  The Graph
+Restructurer only *reorders* those arrays (and renumbers the feature rows);
+the math is unchanged, so original and restructured layouts agree to
+floating-point reassociation.  Per-destination softmax uses segment
+max/sum over global dst ids and therefore stays exact across the three
+subgraphs even though a backbone destination's edges span two of them.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def feature_projection(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """FP sub-stage: per-type dense projection (the MLP of §2.2)."""
+    return x @ w + b
+
+
+def na_mean(
+    h_src: jax.Array,  # (N_src, D) projected source features
+    src: jax.Array,  # (E,) int32
+    dst: jax.Array,  # (E,) int32
+    num_dst: int,
+) -> jax.Array:
+    """RGCN-style NA: degree-normalized sum of neighbour features."""
+    gathered = h_src[src]  # (E, D)
+    summed = jax.ops.segment_sum(gathered, dst, num_segments=num_dst)
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst, num_segments=num_dst)
+    return summed / jnp.maximum(deg, 1.0)[:, None]
+
+
+def edge_softmax_weights(
+    logits: jax.Array,  # (E,) unnormalized attention logits
+    dst: jax.Array,  # (E,)
+    num_dst: int,
+) -> jax.Array:
+    """Numerically-stable softmax over each destination's in-edges."""
+    m = jax.ops.segment_max(logits, dst, num_segments=num_dst)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    ex = jnp.exp(logits - m[dst])
+    s = jax.ops.segment_sum(ex, dst, num_segments=num_dst)
+    return ex / jnp.maximum(s[dst], 1e-9)
+
+
+def na_attention(
+    h_src: jax.Array,  # (N_src, D)
+    h_dst: jax.Array,  # (N_dst, D) destination-side features for logits
+    src: jax.Array,
+    dst: jax.Array,
+    num_dst: int,
+    a_src: jax.Array,  # (D,) attention vector, source side
+    a_dst: jax.Array,  # (D,) attention vector, destination side
+    edge_bias: Optional[jax.Array] = None,  # scalar or (E,) edge-type term (Simple-HGN)
+    leaky_slope: float = 0.2,
+) -> jax.Array:
+    """GAT-style NA (RGAT / Simple-HGN): weighted sum with edge softmax."""
+    e_s = h_src @ a_src  # (N_src,)
+    e_d = h_dst @ a_dst  # (N_dst,)
+    logits = e_s[src] + e_d[dst]
+    if edge_bias is not None:
+        logits = logits + edge_bias
+    logits = jax.nn.leaky_relu(logits, leaky_slope)
+    alpha = edge_softmax_weights(logits, dst, num_dst)
+    weighted = h_src[src] * alpha[:, None]
+    return jax.ops.segment_sum(weighted, dst, num_segments=num_dst)
+
+
+def semantic_fusion(
+    z_stack: jax.Array,  # (P, N, D) NA outputs per semantic graph
+    w: jax.Array,  # (D, D_att)
+    b: jax.Array,  # (D_att,)
+    q: jax.Array,  # (D_att,)
+) -> jax.Array:
+    """SF sub-stage (HAN-style semantic attention, §2.2).
+
+    beta_p = softmax_p( mean_v q . tanh(W z_p,v + b) ); out = sum_p beta_p z_p.
+    """
+    s = jnp.tanh(z_stack @ w + b) @ q  # (P, N)
+    beta = jax.nn.softmax(jnp.mean(s, axis=1))  # (P,)
+    return jnp.einsum("p,pnd->nd", beta, z_stack)

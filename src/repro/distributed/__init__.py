@@ -1,0 +1,9 @@
+"""Distribution layer: sharding rules, collectives helpers."""
+from repro.distributed.sharding import (
+    data_pspec,
+    param_pspecs,
+    cache_pspecs,
+    shard_params,
+)
+
+__all__ = ["param_pspecs", "data_pspec", "cache_pspecs", "shard_params"]

@@ -1,0 +1,161 @@
+"""Sharding rules: FSDP ('data') x TP/EP ('model'), multi-pod DP ('pod').
+
+Parameters get PartitionSpecs by leaf name (stacked leaves carry a leading
+group dim -> leading None).  The scheme:
+
+  * dense in-projections  (G, D, X): P(_, fsdp, 'model')   — TP on out dim
+  * dense out-projections (G, X, D): P(_, 'model', fsdp)   — TP on in dim
+  * experts               (G, E, ...): experts over 'model' (EP), D over fsdp
+  * embedding             (V, D): vocab over 'model'
+  * norms / scalars: replicated
+
+``fsdp`` defaults to 'data' (ZeRO-3-style parameter sharding); across pods
+parameters are replicated and gradients all-reduce over 'pod' (DCN-friendly
+pure DP between pods).  ``fsdp_pods=True`` extends FSDP across
+('pod','data') instead — a memory/bandwidth trade (hillclimb lever).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def _spec_for(path: Tuple[str, ...], shape: Tuple[int, ...], fsdp,
+              attn_model: bool = True) -> P:
+    name = path[-1]
+    in_blocks = "blocks" in path
+    lead = (None,) if in_blocks else ()
+
+    def mk(*axes):
+        return P(*lead, *axes)
+
+    if name == "embed":
+        return P("model", None)
+    if name == "unembed":
+        return P(None, "model")
+    if name == "final_norm":
+        return P(None)
+
+    ndim = len(shape) - len(lead)
+    # Attention projections: TP over 'model' only when the head count
+    # divides the axis (attn_model).  Otherwise the attention core runs
+    # context-parallel (query-seq over 'model', see kernels/ops.py) and
+    # the projections stay FSDP-only — a 'model'-sharded H*dh dim cannot
+    # be reshaped to (H, dh) when H doesn't divide the axis.
+    if name in ("wq", "wk", "wv"):
+        return mk(fsdp, "model" if attn_model else None)
+    if name == "wo":
+        return mk("model" if attn_model else None, fsdp)
+    if name in ("w_in", "w_kr", "w_dkv"):
+        return mk(fsdp, "model" if name == "w_in" else None)
+    if name == "w_out":
+        return mk("model", fsdp)
+    if name == "w_ukv":
+        return mk(None, "model" if attn_model else None)
+    if name == "w_router":
+        return mk(fsdp, None)
+    if name in ("w_gate", "w_up"):
+        if ndim == 3:  # moe (E, D, F)
+            return mk("model", fsdp, None)
+        return mk(fsdp, "model")
+    if name == "w_down":
+        if ndim == 3:  # moe (E, F, D)
+            return mk("model", None, fsdp)
+        return mk("model", fsdp)
+    if name == "w_conv":
+        return mk(None, "model")
+    if name in ("b_conv", "norm", "a_log", "dt_bias"):
+        return mk("model")
+    if name in ("ln1", "ln2", "ln1_post", "ln2_post", "kv_norm"):
+        return mk(*([None] * ndim))
+    # fallback: replicate
+    return mk(*([None] * ndim))
+
+
+def param_pspecs(cfg: ArchConfig, params: Dict, fsdp="data",
+                 model_axis_size: int = 16) -> Dict:
+    """Same-structure pytree of PartitionSpec."""
+    attn_model = cfg.num_heads > 0 and cfg.num_heads % model_axis_size == 0 \
+        and cfg.num_kv_heads % model_axis_size == 0
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(path, v) for v in node]
+            return type(node)(t) if not isinstance(node, list) else t
+        return _spec_for(path, np.shape(node), fsdp, attn_model)
+
+    return walk((), params)
+
+
+def data_pspec(mesh: Mesh, batch: int) -> P:
+    """Shard the batch over every data-parallel axis that divides it."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    usable = []
+    for a in axes:
+        size = mesh.shape[a]
+        if batch % int(np.prod([mesh.shape[u] for u in usable] or [1]) * size) == 0:
+            usable.append(a)
+    if not usable:
+        return P(None)
+    return P(tuple(usable))
+
+
+def cache_pspecs(cfg: ArchConfig, cache: Any, mesh: Mesh, batch: int) -> Any:
+    """KV/SSM cache specs.
+
+    Batch shards over the data axes.  KV heads shard over 'model' only when
+    the head count divides the axis; otherwise the cache TIME dimension
+    shards over 'model' (flash-decode style — attention contracts the
+    sharded T with an all-reduce).  MLA's latent cache always shards T over
+    'model' (it has no head dimension).  batch=1 long-context decode shards
+    T over every available axis.
+    """
+    dp = data_pspec(mesh, batch)
+    batch_axis = dp[0] if len(dp) and dp[0] is not None else None
+    msize = int(mesh.shape.get("model", 1))
+    kv_heads_ok = cfg.num_kv_heads > 0 and cfg.num_kv_heads % msize == 0
+    ssm_heads_ok = cfg.ssm_heads > 0 and cfg.ssm_heads % msize == 0
+
+    def one(pos_cache):
+        out = {}
+        for k, v in pos_cache.items():
+            nd = np.ndim(v)
+            if k in ("k", "v"):  # (G, B, Hkv, T, dh)
+                if batch_axis is not None:
+                    out[k] = (P(None, batch_axis, "model", None, None)
+                              if kv_heads_ok
+                              else P(None, batch_axis, None, "model", None))
+                else:  # batch=1 long-context decode
+                    out[k] = (P(None, None, "model", "data", None)
+                              if kv_heads_ok
+                              else P(None, None, None, ("data", "model"), None))
+            elif k == "c_kv":  # (G, B, T, r)
+                out[k] = (P(None, batch_axis, "model", None)
+                          if batch_axis else P(None, None, ("data", "model"), None))
+            elif k == "k_r":  # (G, B, 1, T, rope)
+                out[k] = (P(None, batch_axis, None, "model", None)
+                          if batch_axis else P(None, None, None, ("data", "model"), None))
+            elif k == "conv":  # (G, B, cw-1, conv_dim)
+                out[k] = P(None, batch_axis, None, "model")
+            elif k == "ssm":  # (G, B, H, P, N)
+                out[k] = (P(None, batch_axis, "model", None, None)
+                          if ssm_heads_ok
+                          else P(None, batch_axis, None, None, "model"))
+            else:
+                out[k] = P(*([None] * nd))
+        return out
+
+    return [one(c) for c in cache]
+
+
+def shard_params(params: Dict, mesh: Mesh, specs: Dict) -> Dict:
+    """Place a host pytree onto the mesh (used by train.py, not dry-run)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)

@@ -1,0 +1,17 @@
+"""Heterogeneous-graph substrate: typed graphs, relations, synthetic datasets.
+
+This layer is host-side (numpy): graph topology manipulation — composition,
+matching, reordering — is the paper's *frontend* work and runs on the host,
+pipelined with the TPU backend (see DESIGN.md §2).
+"""
+from repro.hetero.graph import HetGraph, Relation, compose_relations, CompositionCost
+from repro.hetero.datasets import make_dataset, DATASETS
+
+__all__ = [
+    "HetGraph",
+    "Relation",
+    "compose_relations",
+    "CompositionCost",
+    "make_dataset",
+    "DATASETS",
+]

@@ -1,0 +1,228 @@
+"""Typed heterogeneous graph structures and relation composition.
+
+A ``Relation`` is a directed bipartite edge set between two vertex types,
+stored as a sorted COO edge list (the exact host-side analogue of the CSR
+the accelerator streams).  ``compose_relations`` is the SGB primitive: the
+boolean product of two relations (reachability through the shared middle
+vertex type), with an exact cost model counting the work the paper's SGB
+stage performs (join multiply-accumulates and bytes moved).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+IDX = np.int32
+_IDX_BYTES = 4
+# Feature element size used for memory-traffic accounting (bf16 on TPU).
+FEATURE_BYTES = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class CompositionCost:
+    """Exact operation/byte counters for one relation composition.
+
+    ``macs``  — join pairs generated (the multiply-accumulates an SpGEMM
+                datapath performs before output dedup/merge).
+    ``bytes_read`` / ``bytes_written`` — edge-list traffic in/out.
+    """
+
+    macs: int
+    bytes_read: int
+    bytes_written: int
+
+    def __add__(self, other: "CompositionCost") -> "CompositionCost":
+        return CompositionCost(
+            self.macs + other.macs,
+            self.bytes_read + other.bytes_read,
+            self.bytes_written + other.bytes_written,
+        )
+
+    @staticmethod
+    def zero() -> "CompositionCost":
+        return CompositionCost(0, 0, 0)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_read + self.bytes_written
+
+
+@dataclasses.dataclass(frozen=True)
+class Relation:
+    """Directed bipartite edge set ``src_type -> dst_type``.
+
+    Edges are kept sorted by (src, dst) and deduplicated; this is the
+    canonical layout all of core/ relies on.
+    """
+
+    src_type: str
+    dst_type: str
+    num_src: int
+    num_dst: int
+    src: np.ndarray  # (E,) int32
+    dst: np.ndarray  # (E,) int32
+
+    def __post_init__(self):
+        assert self.src.dtype == IDX and self.dst.dtype == IDX
+        assert self.src.shape == self.dst.shape
+
+    @property
+    def name(self) -> str:
+        return f"{self.src_type}{self.dst_type}"
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return self.num_edges * 2 * _IDX_BYTES
+
+    @staticmethod
+    def from_edges(
+        src_type: str,
+        dst_type: str,
+        num_src: int,
+        num_dst: int,
+        src: np.ndarray,
+        dst: np.ndarray,
+    ) -> "Relation":
+        """Build a canonical (sorted, deduped) relation from raw edges."""
+        src = np.asarray(src, dtype=IDX)
+        dst = np.asarray(dst, dtype=IDX)
+        if src.size:
+            key = src.astype(np.int64) * num_dst + dst.astype(np.int64)
+            key = np.unique(key)
+            src = (key // num_dst).astype(IDX)
+            dst = (key % num_dst).astype(IDX)
+        return Relation(src_type, dst_type, num_src, num_dst, src, dst)
+
+    def reverse(self) -> "Relation":
+        """The reverse relation (dst -> src), canonicalized."""
+        return Relation.from_edges(
+            self.dst_type, self.src_type, self.num_dst, self.num_src, self.dst, self.src
+        )
+
+    def to_csr(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Return (row_ptr[num_src+1], col_idx[E]) sorted by (src, dst)."""
+        counts = np.bincount(self.src, minlength=self.num_src)
+        row_ptr = np.zeros(self.num_src + 1, dtype=np.int64)
+        np.cumsum(counts, out=row_ptr[1:])
+        return row_ptr, self.dst.copy()
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.num_src)
+
+    def in_degrees(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.num_dst)
+
+    def dense(self, dtype=np.float32) -> np.ndarray:
+        """Dense 0/1 adjacency — oracle/visualisation only (small graphs)."""
+        a = np.zeros((self.num_src, self.num_dst), dtype=dtype)
+        a[self.src, self.dst] = 1
+        return a
+
+
+def compose_relations(
+    r1: Relation, r2: Relation
+) -> Tuple[Relation, CompositionCost]:
+    """Boolean relation product: edges (u, w) s.t. exists v with u->v in r1, v->w in r2.
+
+    Sorted-merge join on the shared middle type.  The cost model counts the
+    join pairs *before* dedup (``macs``) — exactly the multiply-accumulate
+    work an SpGEMM datapath performs — plus the edge bytes streamed.
+    """
+    if r1.dst_type != r2.src_type:
+        raise ValueError(f"cannot compose {r1.name} with {r2.name}")
+    if r1.num_dst != r2.num_src:
+        raise ValueError("middle-type cardinality mismatch")
+
+    # r1 sorted by dst (middle), r2 sorted by src (middle) — gather join.
+    order1 = np.argsort(r1.dst, kind="stable")
+    mid1 = r1.dst[order1]
+    left = r1.src[order1]
+
+    ptr2, cols2 = r2.to_csr()
+    deg2 = (ptr2[1:] - ptr2[:-1]).astype(np.int64)
+
+    # For every r1 edge (u, v): expand to deg2[v] output pairs.
+    expand = deg2[mid1]
+    macs = int(expand.sum())
+    if macs == 0:
+        out = Relation.from_edges(
+            r1.src_type, r2.dst_type, r1.num_src, r2.num_dst,
+            np.empty(0, IDX), np.empty(0, IDX),
+        )
+    else:
+        # Vectorized expansion: repeat left endpoints, gather right endpoints.
+        out_src = np.repeat(left, expand)
+        starts = ptr2[mid1]
+        # index into cols2: for each edge i, range(starts[i], starts[i]+expand[i])
+        offs = np.arange(macs, dtype=np.int64) - np.repeat(
+            np.cumsum(expand) - expand, expand
+        )
+        out_dst = cols2[np.repeat(starts, expand) + offs]
+        out = Relation.from_edges(
+            r1.src_type, r2.dst_type, r1.num_src, r2.num_dst, out_src, out_dst
+        )
+
+    cost = CompositionCost(
+        macs=macs,
+        bytes_read=r1.nbytes + r2.nbytes,
+        bytes_written=out.nbytes,
+    )
+    return out, cost
+
+
+@dataclasses.dataclass
+class HetGraph:
+    """A heterogeneous graph: typed vertex sets, features, one-hop relations."""
+
+    name: str
+    num_vertices: Dict[str, int]  # vertex type -> count
+    feature_dims: Dict[str, int]  # vertex type -> raw feature dim (0 = featureless)
+    relations: Dict[str, Relation]  # "AP" -> Relation(A->P)
+    features: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @property
+    def vertex_types(self) -> List[str]:
+        return sorted(self.num_vertices)
+
+    @property
+    def relation_names(self) -> List[str]:
+        return sorted(self.relations)
+
+    def relation(self, name: str) -> Relation:
+        return self.relations[name]
+
+    def total_vertices(self) -> int:
+        return sum(self.num_vertices.values())
+
+    def total_edges(self) -> int:
+        return sum(r.num_edges for r in self.relations.values())
+
+    def metapath_is_valid(self, metapath: str) -> bool:
+        """A metapath 'APSPA' is valid iff every adjacent pair is a relation."""
+        if len(metapath) < 2:
+            return False
+        return all(
+            metapath[i : i + 2] in self.relations for i in range(len(metapath) - 1)
+        )
+
+    def enumerate_metapaths(self, max_hops: int, start: Optional[str] = None) -> List[str]:
+        """All valid metapaths up to ``max_hops`` relations (paper Fig. 2 x-axis)."""
+        frontier = [t for t in self.vertex_types if start is None or t == start]
+        paths: List[str] = []
+        level = [t for t in frontier]
+        for _ in range(max_hops):
+            nxt = []
+            for p in level:
+                last = p[-1]
+                for rel in self.relations.values():
+                    if rel.src_type == last:
+                        nxt.append(p + rel.dst_type)
+            paths.extend(q for q in nxt if len(q) >= 2)
+            level = nxt
+        return paths

@@ -1,0 +1,149 @@
+"""Zigzag context-parallel causal attention (shard_map over 'model').
+
+§Perf cell-B iteration 2.  Under GSPMD, causal attention over a
+sequence-sharded q either computes the masked upper triangle (2x waste) or
+unbalances shards (contiguous chunks: shard P-1 does P x shard 0's work).
+The zigzag schedule fixes both *inside one SPMD program*:
+
+  * split S into 2P chunks of c rows; shard i owns chunks (i, 2P-1-i) —
+    causal work (i+1) + (2P-i) = 2P+1 chunk-pairs, IDENTICAL for every
+    shard (statically balanced);
+  * a static loop of 2P+1 steps processes, per shard, one (q-chunk,
+    kv-block) pair per step; the kv block index is a traced function of
+    the shard id (dynamic_slice of the replicated K/V — no collectives);
+  * masking inside a pair handles the diagonal.
+
+K/V are replicated over 'model' (they already are under the qseq scheme —
+attention projections are not model-sharded for these archs), so the only
+communication is what the surrounding layers already do.
+
+Per-device HLO FLOPs: (2P+1) * c * c' pairs ~= causal-total / P — the
+full 2x causal saving, balanced.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _zigzag_perm(two_p: int):
+    """Chunk order such that contiguous per-shard slices hold the zigzag
+    pair: [0, 2P-1, 1, 2P-2, ...]."""
+    idx = []
+    for i in range(two_p // 2):
+        idx.extend([i, two_p - 1 - i])
+    return idx
+
+
+def zigzag_positions(s: int, p_shards: int = 16):
+    """Logical position of each index when the sequence is STORED in
+    zigzag chunk order (the end-to-end layout of the 'native' mode)."""
+    import numpy as np
+
+    two_p = 2 * p_shards
+    c = s // two_p
+    return np.concatenate(
+        [np.arange(p * c, (p + 1) * c) for p in _zigzag_perm(two_p)])
+
+
+def cp_zigzag_attention(
+    q: jax.Array,  # (B, Hq, S, Dh) — replicated over 'model' on entry
+    k: jax.Array,  # (B, Hkv, S, Dh)
+    v: jax.Array,  # (B, Hkv, S, Dh)
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    axis: str = "model",
+    p_shards: int = 16,
+    pre_permuted: bool = False,
+) -> jax.Array:
+    """``pre_permuted=True``: the whole residual stream already lives in
+    zigzag layout (tokens + targets permuted at ingestion, RoPE uses
+    ``zigzag_positions``) — no data movement in or out; K/V chunks are
+    addressed through the inverse permutation instead."""
+    b, hq, s, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    dv = v.shape[-1]
+    scale = scale if scale is not None else dh ** -0.5
+    two_p = 2 * p_shards
+    assert s % two_p == 0, (s, two_p)
+    c = s // two_p
+    perm = jnp.asarray(_zigzag_perm(two_p))
+    inv = jnp.argsort(jnp.asarray(perm))
+
+    if pre_permuted:
+        qz = q  # storage order IS zigzag order
+    else:
+        qc = q.reshape(b, hq, two_p, c, dh)[:, :, perm]  # zigzag chunk order
+        qz = qc.reshape(b, hq, s, dh)
+
+    def local(qloc, kf, vf):
+        # qloc: (B_l, Hq, 2c, Dh) = this shard's (lo=i, hi=2P-1-i) chunks
+        bl = qloc.shape[0]
+        i = jax.lax.axis_index(axis)
+        q_lo, q_hi = qloc[:, :, :c], qloc[:, :, c:]
+        qg_lo = q_lo.reshape(bl, hkv, g, c, dh).astype(jnp.float32)
+        qg_hi = q_hi.reshape(bl, hkv, g, c, dh).astype(jnp.float32)
+        lo_id, hi_id = i, two_p - 1 - i
+        n_hi = two_p - i  # kv blocks needed by the hi chunk
+
+        m = jnp.full((2, bl, hkv, g, c), -1e30, jnp.float32)
+        l = jnp.zeros((2, bl, hkv, g, c), jnp.float32)
+        acc = jnp.zeros((2, bl, hkv, g, c, dv), jnp.float32)
+
+        for t in range(two_p + 1):
+            use_hi = t < n_hi
+            j = jnp.where(use_hi, t, t - n_hi)  # kv block index (traced)
+            qg = jnp.where(use_hi, qg_hi, qg_lo)
+            q_chunk = jnp.where(use_hi, hi_id, lo_id)
+            # logical kv chunk j lives at storage index inv[j] when the
+            # stream is zigzag-laid-out; at j otherwise
+            j_store = inv[j] if pre_permuted else j
+            kb = jax.lax.dynamic_slice_in_dim(kf, j_store * c, c, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vf, j_store * c, c, axis=2)
+            logits = jnp.einsum("bkgsd,bktd->bkgst", qg,
+                                kb.astype(jnp.float32)) * scale
+            if softcap is not None:
+                logits = softcap * jnp.tanh(logits / softcap)
+            qpos = q_chunk * c + jnp.arange(c)[:, None]
+            kpos = j * c + jnp.arange(c)[None, :]
+            mask = kpos <= qpos  # (c, c)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            sel = jnp.where(use_hi, 1, 0)
+            m_old = m[sel]
+            m_new = jnp.maximum(m_old, logits.max(axis=-1))
+            alpha = jnp.exp(m_old - m_new)
+            pmat = jnp.where(mask[None, None, None],
+                             jnp.exp(logits - m_new[..., None]), 0.0)
+            l_new = l[sel] * alpha + pmat.sum(axis=-1)
+            acc_new = acc[sel] * alpha[..., None] + jnp.einsum(
+                "bkgst,bktd->bkgsd", pmat, vb.astype(jnp.float32))
+            m = m.at[sel].set(m_new)
+            l = l.at[sel].set(l_new)
+            acc = acc.at[sel].set(acc_new)
+
+        out = acc / jnp.maximum(l, 1e-20)[..., None]  # (2, bl, hkv, g, c, dv)
+        # local layout [lo, hi]; shard-order concat over the axis yields
+        # global chunk order [0, 2P-1, 1, 2P-2, ...] == the zigzag perm
+        out = jnp.concatenate([out[0], out[1]], axis=3)  # (bl, hkv, g, 2c, dv)
+        return out.reshape(bl, hq, 2 * c, dv).astype(q.dtype)
+
+    mesh = jax.sharding.get_abstract_mesh()
+    batch_ax = "data" if "data" in mesh.axis_names else None
+    shard_fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch_ax, None, axis, None),
+                  P(batch_ax, None, None, None),
+                  P(batch_ax, None, None, None)),
+        out_specs=P(batch_ax, None, axis, None),
+        check_vma=False,
+    )
+    oz = shard_fn(qz, k, v)  # (B, Hq, S, Dv) in zigzag chunk order
+    if pre_permuted:
+        return oz  # stay in zigzag layout end-to-end
+    oc = oz.reshape(b, hq, two_p, c, dv)[:, :, inv]
+    return oc.reshape(b, hq, s, dv)

@@ -1,0 +1,132 @@
+"""Per-destination edge-softmax statistics kernel (flash-style online m/s).
+
+The attention NA sub-stage needs alpha_e = exp(l_e - m[dst_e]) / s[dst_e]
+with m/s the per-destination max / sum-of-exp.  A destination's edges can
+span several edge blocks (and, after restructuring, two subgraphs), so the
+kernel accumulates (m, s) *online* across consecutive blocks of the same
+destination tile — exactly the flash-attention rescaling trick applied to
+graph aggregation:
+
+    m_new = max(m_old, max_block)
+    s_new = s_old * exp(m_old - m_new) + sum_e exp(l_e - m_new[dst_e])
+
+The cheap 1-D epilogue (alpha per edge) runs in plain jnp; the heavy
+feature aggregation then uses kernels/seg_sum.py with alpha as weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.seg_sum import PackedEdges
+
+_NEG = -1e30
+
+
+def _stats_kernel(
+    dtile_ref, first_ref,  # scalar-prefetch
+    logit_ref, dstl_ref, valid_ref,  # (1, EB)
+    m_ref, s_ref,  # (1, TD) accumulators
+    *, eb: int, td: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(first_ref[i] == 1)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    logit = logit_ref[0, :]
+    dstl = dstl_ref[0, :]
+    valid = valid_ref[0, :] > 0
+    scat = jax.lax.broadcasted_iota(jnp.int32, (td, eb), 0) == dstl[None, :]
+    eff = scat & valid[None, :]
+    masked = jnp.where(eff, logit[None, :], _NEG)  # (TD, EB)
+    blockmax = jnp.max(masked, axis=1)  # (TD,)
+    m_old = m_ref[0, :]
+    m_new = jnp.maximum(m_old, blockmax)
+    # guard: exp(-inf - -inf) -> use 0 scale when m_old was -inf
+    scale = jnp.where(m_old > _NEG / 2, jnp.exp(m_old - m_new), 0.0)
+    # per-edge exp(l - m_new[dst]) via one-hot gather of m_new
+    m_e = jnp.einsum("te,t->e", eff.astype(jnp.float32), m_new)
+    ex = jnp.where(valid, jnp.exp(logit - m_e), 0.0)
+    s_add = eff.astype(jnp.float32) @ ex  # (TD,)
+    s_ref[0, :] = s_ref[0, :] * scale + s_add
+    m_ref[0, :] = m_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_dst_tiles", "dst_tile_rows", "interpret")
+)
+def _stats_call(dst_tile, first, logits, dst_local, valid,
+                num_dst_tiles, dst_tile_rows, interpret):
+    nb, eb = logits.shape
+    td = dst_tile_rows
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, eb), lambda i, t, f: (i, 0)),
+            pl.BlockSpec((1, eb), lambda i, t, f: (i, 0)),
+            pl.BlockSpec((1, eb), lambda i, t, f: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, td), lambda i, t, f: (t[i], 0)),
+            pl.BlockSpec((1, td), lambda i, t, f: (t[i], 0)),
+        ],
+    )
+    kern = functools.partial(_stats_kernel, eb=eb, td=td)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((num_dst_tiles, td), jnp.float32),
+            jax.ShapeDtypeStruct((num_dst_tiles, td), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dst_tile, first, logits, dst_local, valid)
+
+
+def edge_softmax_stats(
+    packed: PackedEdges,
+    logits_blocked: np.ndarray,  # (nb, EB) float32, aligned with packed blocks
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-destination (m, s); rows never touched get m=-1e30, s=0."""
+    td = packed.dst_tile_rows
+    num_dst_tiles = max(1, -(-packed.num_dst // td))
+    eb = packed.src_local.shape[1]
+    valid = (np.arange(eb)[None, :] < packed.count[:, None]).astype(np.int32)
+    m, s = _stats_call(
+        jnp.asarray(packed.dst_tile), jnp.asarray(packed.first_in_tile),
+        jnp.asarray(logits_blocked, jnp.float32),
+        jnp.asarray(packed.dst_local), jnp.asarray(valid),
+        num_dst_tiles, td, interpret,
+    )
+    touched = np.zeros(num_dst_tiles, bool)
+    if packed.num_blocks:
+        touched[np.asarray(packed.dst_tile)] = True
+    tmask = jnp.asarray(touched)[:, None]
+    m = jnp.where(tmask, m, _NEG).reshape(-1)[: packed.num_dst]
+    s = jnp.where(tmask, s, 0.0).reshape(-1)[: packed.num_dst]
+    return m, s
+
+
+def block_logits(packed: PackedEdges, edge_logits_in_order: np.ndarray) -> np.ndarray:
+    """Scatter a flat (E,) logit array (in scheduled edge order) into the
+    (nb, EB) blocked layout matching ``packed`` (padding gets -1e30)."""
+    nb, eb = packed.src_local.shape
+    out = np.full((nb, eb), _NEG, np.float32)
+    pos = 0
+    for k in range(nb):
+        n = int(packed.count[k])
+        out[k, :n] = edge_logits_in_order[pos : pos + n]
+        pos += n
+    assert pos == edge_logits_in_order.shape[0]
+    return out

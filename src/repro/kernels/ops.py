@@ -1,0 +1,215 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op dispatches on ``backend``:
+  * "pallas"     — pl.pallas_call targeting TPU (interpret=False);
+  * "interpret"  — same kernel body executed in Python on CPU (validation);
+  * "jnp"        — the pure-jnp oracle (used by the dry-run so that XLA's
+                   cost_analysis sees the FLOPs; Pallas custom-calls are
+                   opaque to it).
+
+Default is "interpret" in this CPU container; launch/train.py flips to
+"pallas" when jax.default_backend() == "tpu".
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as _ref
+from repro.kernels.edge_softmax import block_logits, edge_softmax_stats
+from repro.kernels.flash_attention import flash_attention as _fa
+from repro.kernels.seg_sum import PackedEdges, pack_edge_blocks, seg_sum_na
+from repro.kernels.spgemm_bsr import compose_dense_blocked
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+DEFAULT_BACKEND = "interpret"
+
+# Attention sharding hint, set by the launch layer under a mesh context:
+#   None    — no constraints (single-device tests/benches)
+#   "heads" — shard heads over the 'model' axis (requires divisibility)
+#   "qseq"  — context parallelism: shard QUERY sequence over 'model'
+#             (the general fallback when head counts don't divide the
+#             model axis — GSPMD would otherwise replicate attention
+#             per device, a 16x compute/memory blowup)
+ATTN_SHARDING: Optional[str] = None
+
+# Batch axes of the current launch (e.g. ('data',) or (('pod', 'data'),)).
+# When set, constrain_batch() pins activations' leading dim to the data
+# axes; with_sharding_constraint transposes to itself, so the BACKWARD
+# cotangents inherit the same sharding — without this, GSPMD loses batch
+# sharding inside rematerialized backward bodies and replicates the whole
+# microbatch per device.
+BATCH_AXES: Optional[tuple] = None
+
+# Long-sequence attention implementation for the jnp path:
+#   "chunked"    — kv-only blocking (baseline; computes masked halves)
+#   "chunked2d"  — q+kv blocking with block-level causal/window skips
+#                  (§Perf optimization: ~2x FLOPs for causal, O(S/window)x
+#                  for sliding-window layers)
+ATTN_IMPL: str = "chunked"
+
+
+def _constrain(x: jax.Array, spec) -> jax.Array:
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x  # no mesh context (unit tests)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim 0 (batch / token-group) to the data axes; rest unconstrained."""
+    from jax.sharding import PartitionSpec as P
+
+    if BATCH_AXES is None:
+        return x
+    spec = (BATCH_AXES[0], *([P.UNCONSTRAINED] * (x.ndim - 1)))
+    return _constrain(x, spec)
+
+
+def constrain_vocab(logits: jax.Array) -> jax.Array:
+    """Pin the vocab (last) dim to 'model' — keeps the unembed matmul
+    vocab-parallel instead of letting GSPMD replicate the (D, V) weight."""
+    from jax.sharding import PartitionSpec as P
+
+    if BATCH_AXES is None:
+        return logits
+    spec = (*([P.UNCONSTRAINED] * (logits.ndim - 1)), "model")
+    return _constrain(logits, spec)
+
+
+def _attn_shard(q, k, v):
+    from jax.sharding import PartitionSpec as P
+
+    U = P.UNCONSTRAINED
+    if ATTN_SHARDING == "heads":
+        q = _constrain(q, (U, "model", U, U))
+        k = _constrain(k, (U, "model", U, U))
+        v = _constrain(v, (U, "model", U, U))
+    elif ATTN_SHARDING == "qseq":
+        q = _constrain(q, (U, None, "model", U))
+        k = _constrain(k, (U, None, None, U))
+        v = _constrain(v, (U, None, None, U))
+    return q, k, v
+
+
+def _interpret(backend: str) -> bool:
+    return backend != "pallas"
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    backend: str = DEFAULT_BACKEND,
+    bq: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """Multi-head attention (B, Hq, S, Dh) x (B, Hkv, T, Dh) -> (B, Hq, S, Dh)."""
+    if backend == "jnp":
+        q, k, v = _attn_shard(q, k, v)
+        s, t = q.shape[2], k.shape[2]
+        if s * t <= 2048 * 2048:
+            o = _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+        elif ATTN_IMPL == "chunked2d":
+            o = _ref.attention_chunked_2d(q, k, v, causal=causal,
+                                          window=window, softcap=softcap,
+                                          bq=4096, bk=2048)
+        elif (ATTN_IMPL in ("cp_zigzag", "cp_zigzag_native")
+              and causal and window is None
+              and q.shape[2] == k.shape[2] and q.shape[2] % 32 == 0):
+            # §Perf: shard_map zigzag context parallelism — statically
+            # balanced causal work; the 'native' mode keeps the residual
+            # stream in zigzag layout end-to-end (no data movement)
+            from repro.kernels.cp_attention import cp_zigzag_attention
+
+            return cp_zigzag_attention(
+                q, k, v, softcap=softcap, p_shards=16,
+                pre_permuted=(ATTN_IMPL == "cp_zigzag_native"))
+        else:
+            # long sequences: statically-chunked online softmax (never
+            # builds (S, T) logits; FLOPs stay visible to cost_analysis)
+            o = _ref.attention_chunked(q, k, v, causal=causal, window=window,
+                                       softcap=softcap, bk=1024)
+        if ATTN_SHARDING == "qseq":
+            from jax.sharding import PartitionSpec as P
+
+            o = _constrain(o, (P.UNCONSTRAINED, None, "model", P.UNCONSTRAINED))
+        return o
+    return _fa(q, k, v, causal=causal, window=window, softcap=softcap,
+               bq=bq, bk=bk, interpret=_interpret(backend))
+
+
+def ssd(
+    x: jax.Array, a_log: jax.Array, b_coef: jax.Array, c_coef: jax.Array,
+    chunk: int = 64,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Mamba2 SSD scan (B, S, H, P)."""
+    if backend == "jnp":
+        # chunked-vectorized path: static HLO, full FLOP visibility
+        c = chunk if x.shape[1] % chunk == 0 else 1
+        return _ref.ssd_chunked(x, a_log, b_coef, c_coef, chunk=c)
+    return _ssd(x, a_log, b_coef, c_coef, chunk=chunk, interpret=_interpret(backend))
+
+
+def na_aggregate(
+    src: np.ndarray,
+    dst: np.ndarray,
+    h: jax.Array,
+    num_dst: int,
+    weight: Optional[np.ndarray] = None,
+    backend: str = DEFAULT_BACKEND,
+    packed: Optional[PackedEdges] = None,
+) -> jax.Array:
+    """Neighbor aggregation: out[d] = sum_{(s,d) in E} w * h[s]."""
+    if backend == "jnp":
+        return _ref.seg_sum_na_ref(src, dst, h, num_dst, weight=weight)
+    if packed is None:
+        packed = pack_edge_blocks(src, dst, int(h.shape[0]), num_dst, weight=weight)
+    elif weight is not None:
+        packed = packed.with_weights(np.asarray(weight, np.float32))
+    return seg_sum_na(packed, h, interpret=_interpret(backend))
+
+
+def na_attention_aggregate(
+    src: np.ndarray,
+    dst: np.ndarray,
+    edge_logits: np.ndarray,
+    h: jax.Array,
+    num_dst: int,
+    backend: str = DEFAULT_BACKEND,
+) -> Tuple[jax.Array, jax.Array]:
+    """Edge-softmax attention NA; returns (aggregated, alpha)."""
+    if backend == "jnp":
+        alpha = _ref.edge_softmax_ref(jnp.asarray(edge_logits), jnp.asarray(dst), num_dst)
+        out = _ref.seg_sum_na_ref(src, dst, h, num_dst, weight=np.asarray(alpha))
+        return out, alpha
+    packed = pack_edge_blocks(src, dst, int(h.shape[0]), num_dst)
+    lb = block_logits(packed, np.asarray(edge_logits, np.float32))
+    m, s = edge_softmax_stats(packed, lb, interpret=_interpret(backend))
+    alpha = jnp.exp(jnp.asarray(edge_logits) - m[jnp.asarray(dst)]) / jnp.maximum(
+        s[jnp.asarray(dst)], 1e-9
+    )
+    out = seg_sum_na(
+        packed.with_weights(np.asarray(alpha, np.float32)), h,
+        interpret=_interpret(backend),
+    )
+    return out, alpha
+
+
+def compose_boolean(
+    a_dense: np.ndarray, b_dense: np.ndarray, backend: str = DEFAULT_BACKEND
+):
+    """Boolean adjacency product (SGB composition) via block-sparse SpGEMM."""
+    if backend == "jnp":
+        out = _ref.spgemm_ref(jnp.asarray(a_dense, jnp.float32),
+                              jnp.asarray(b_dense, jnp.float32))
+        return np.asarray(out), {}
+    return compose_dense_blocked(a_dense, b_dense, interpret=_interpret(backend))

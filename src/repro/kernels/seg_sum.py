@@ -1,0 +1,218 @@
+"""Blocked NA aggregation kernel: weighted gather + segment-sum on the MXU.
+
+TPU adaptation of the NA sub-stage datapath (DESIGN.md §2).  The MXU has no
+scatter/gather unit, so sparse aggregation is expressed as two small one-hot
+matmuls per edge block:
+
+    gathered  = onehot(src_local) @ H_band                 # (EB,BAND)@(BAND,D)
+    out_tile += onehot(dst_local) @ (gathered * w)         # (TD,EB)@(EB,D)
+
+The Graph Restructurer makes this efficient: after restructuring, each edge
+block's sources fall in a narrow row *band* of the feature matrix, so the
+kernel streams one (BAND, D) feature tile HBM->VMEM per block instead of
+random rows.  The host-side ``pack_edge_blocks`` materializes this banded
+block format; the number of blocks it needs (and hence feature bytes moved)
+is the direct kernel-level measurement of the paper's buffer-thrashing
+claim (benchmarks/bench_dram_access.py reports it).
+
+Grid: one step per edge block, ordered by destination tile; the output tile
+is revisited by consecutive blocks and zero-initialized on first touch.
+Bands are aligned to BAND-row units so the feature BlockSpec index is just
+the band id (scalar-prefetched).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Edge-block geometry.  VMEM at defaults (fp32): gather one-hot 256x512x4 =
+# 512 KB, scatter one-hot 128x256x4 = 128 KB, feature band 512xD, out tile
+# 128xD — comfortably inside ~16 MB VMEM for D <= 1024.
+EDGE_BLOCK = 256  # edges per block (EB)
+SRC_BAND = 512  # feature rows per band (BAND); also the band alignment
+DST_TILE = 128  # output rows per tile (TD)
+
+
+@dataclasses.dataclass
+class PackedEdges:
+    """Banded edge-block format consumed by the kernel (host-built)."""
+
+    src_local: np.ndarray  # (nb, EB) int32: src - band*SRC_BAND (pad: w=0)
+    dst_local: np.ndarray  # (nb, EB) int32: dst - dst_tile*DST_TILE
+    weight: np.ndarray  # (nb, EB) float32 (0 for padding)
+    band: np.ndarray  # (nb,) int32 band unit index
+    dst_tile: np.ndarray  # (nb,) int32
+    first_in_tile: np.ndarray  # (nb,) int32: 1 = first block of its dst tile
+    count: np.ndarray  # (nb,) int32 valid edges in block (rest is padding)
+    num_src: int
+    num_dst: int
+    edge_block: int = EDGE_BLOCK
+    src_band: int = SRC_BAND
+    dst_tile_rows: int = DST_TILE
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.band.shape[0])
+
+    def hbm_feature_bytes(self, d: int, elem_bytes: int = 2) -> int:
+        """Feature bytes streamed HBM->VMEM: one (BAND, D) tile per block."""
+        return self.num_blocks * self.src_band * d * elem_bytes
+
+    def with_weights(self, flat_weights: np.ndarray) -> "PackedEdges":
+        """Same blocking, new per-edge weights given in scheduled order."""
+        ww = np.zeros_like(self.weight)
+        pos = 0
+        for k in range(self.num_blocks):
+            n = int(self.count[k])
+            ww[k, :n] = flat_weights[pos : pos + n]
+            pos += n
+        assert pos == flat_weights.shape[0]
+        return dataclasses.replace(self, weight=ww)
+
+
+def pack_edge_blocks(
+    src: np.ndarray,
+    dst: np.ndarray,
+    num_src: int,
+    num_dst: int,
+    weight: Optional[np.ndarray] = None,
+    edge_block: int = EDGE_BLOCK,
+    src_band: int = SRC_BAND,
+    dst_tile: int = DST_TILE,
+) -> PackedEdges:
+    """Cut the (already scheduled) edge stream into banded blocks.
+
+    A block closes when it reaches ``edge_block`` edges, its destination
+    tile changes, or its sources leave the current ``src_band``-aligned
+    band.  Locality-poor orderings therefore produce many more blocks —
+    the packer is itself a locality meter.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.ones(src.shape, np.float32) if weight is None else np.asarray(weight, np.float32)
+    E = src.size
+    bounds = []
+    i = 0
+    while i < E:
+        dtile = dst[i] // dst_tile
+        band = src[i] // src_band
+        j = i
+        while (
+            j < E
+            and j - i < edge_block
+            and dst[j] // dst_tile == dtile
+            and src[j] // src_band == band
+        ):
+            j += 1
+        bounds.append((i, j, int(band), int(dtile)))
+        i = j
+
+    nb = len(bounds)
+    sl = np.zeros((nb, edge_block), np.int32)
+    dl = np.zeros((nb, edge_block), np.int32)
+    ww = np.zeros((nb, edge_block), np.float32)
+    bandv = np.zeros((nb,), np.int32)
+    dt = np.zeros((nb,), np.int32)
+    ft = np.zeros((nb,), np.int32)
+    cnt = np.zeros((nb,), np.int32)
+    last_tile = -1
+    for k, (a, b, band, tile) in enumerate(bounds):
+        n = b - a
+        sl[k, :n] = src[a:b] - band * src_band
+        dl[k, :n] = dst[a:b] - tile * dst_tile
+        ww[k, :n] = w[a:b]
+        bandv[k] = band
+        dt[k] = tile
+        ft[k] = 1 if tile != last_tile else 0
+        cnt[k] = n
+        last_tile = tile
+    return PackedEdges(
+        sl, dl, ww, bandv, dt, ft, cnt, num_src, num_dst,
+        edge_block=edge_block, src_band=src_band, dst_tile_rows=dst_tile,
+    )
+
+
+def _na_kernel(
+    band_ref, dtile_ref, first_ref,  # scalar-prefetch (SMEM)
+    srcl_ref, dstl_ref, w_ref, h_ref,  # VMEM inputs
+    out_ref,  # VMEM output tile (TD, D)
+    *, eb: int, band: int, td: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(first_ref[i] == 1)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    srcl = srcl_ref[0, :]
+    dstl = dstl_ref[0, :]
+    w = w_ref[0, :]
+    sel = srcl[:, None] == jax.lax.broadcasted_iota(jnp.int32, (eb, band), 1)
+    gathered = sel.astype(jnp.float32) @ h_ref[...].astype(jnp.float32)
+    scat = jax.lax.broadcasted_iota(jnp.int32, (td, eb), 0) == dstl[None, :]
+    contrib = scat.astype(jnp.float32) @ (gathered * w[:, None])
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_dst_tiles", "src_band", "dst_tile_rows", "interpret")
+)
+def _seg_sum_call(
+    band, dst_tile, first, src_local, dst_local, weight, h,
+    num_dst_tiles, src_band, dst_tile_rows, interpret,
+):
+    nb, eb = src_local.shape
+    d = h.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, eb), lambda i, b, t, f: (i, 0)),
+            pl.BlockSpec((1, eb), lambda i, b, t, f: (i, 0)),
+            pl.BlockSpec((1, eb), lambda i, b, t, f: (i, 0)),
+            pl.BlockSpec((src_band, d), lambda i, b, t, f: (b[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((dst_tile_rows, d), lambda i, b, t, f: (t[i], 0)),
+    )
+    kern = functools.partial(_na_kernel, eb=eb, band=src_band, td=dst_tile_rows)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_dst_tiles * dst_tile_rows, d), h.dtype),
+        interpret=interpret,
+    )(band, dst_tile, first, src_local, dst_local, weight, h)
+
+
+def seg_sum_na(packed: PackedEdges, h: jax.Array, interpret: bool = True) -> jax.Array:
+    """Weighted NA aggregation; returns (num_dst, D)."""
+    band_units = int(packed.band.max()) + 1 if packed.num_blocks else 1
+    n_src_pad = max(band_units * packed.src_band, packed.num_src)
+    if h.shape[0] < n_src_pad:
+        h = jnp.concatenate(
+            [h, jnp.zeros((n_src_pad - h.shape[0], h.shape[1]), h.dtype)], axis=0
+        )
+    num_dst_tiles = max(1, -(-packed.num_dst // packed.dst_tile_rows))
+    out = _seg_sum_call(
+        jnp.asarray(packed.band), jnp.asarray(packed.dst_tile),
+        jnp.asarray(packed.first_in_tile),
+        jnp.asarray(packed.src_local), jnp.asarray(packed.dst_local),
+        jnp.asarray(packed.weight), h,
+        num_dst_tiles, packed.src_band, packed.dst_tile_rows, interpret,
+    )
+    # tiles never visited by any block hold uninitialized memory -> zero them
+    touched = np.zeros(num_dst_tiles, bool)
+    if packed.num_blocks:
+        touched[np.asarray(packed.dst_tile)] = True
+    if not touched.all():
+        mask = jnp.asarray(
+            np.repeat(touched, packed.dst_tile_rows)[: out.shape[0]]
+        )
+        out = jnp.where(mask[:, None], out, 0)
+    return out[: packed.num_dst]

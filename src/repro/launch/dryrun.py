@@ -1,0 +1,508 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+# (This also forces the module docstring below to be a plain string and the
+# __future__ import to be skipped — py3 semantics are fine without it here.)
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, prove memory fit, and extract roofline terms.
+
+Methodology (see EXPERIMENTS.md §Roofline):
+  * The *proof* compile uses the production form (lax.scan over layer
+    groups, microbatched train step) — ``memory_analysis()`` from this
+    artifact is the fits-in-HBM evidence.
+  * XLA's ``cost_analysis()`` counts a while-loop body ONCE regardless of
+    trip count, so FLOP/byte/collective totals come from two small
+    *unrolled* calibration lowerings at G=1 and G=2 groups (microbatch=1)
+    and are extrapolated linearly — exact for homogeneous layer groups:
+        X(G) = X(1) + (G-1) * (X(2) - X(1))
+    Train steps add ``microbatches`` as a linear factor on the
+    value-and-grad part plus an analytic AdamW term (elementwise, exact).
+  * Collective bytes are parsed from the unrolled ``compiled.as_text()``
+    (sum of operand bytes of all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute) and extrapolated the same way.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, cells, get_config
+from repro.distributed.sharding import cache_pspecs, data_pspec, param_pspecs
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES, ArchConfig, ShapeSpec
+from repro.models.lm import LM
+from repro.train.train_step import build_train_step, init_train_state, state_pspecs
+
+# ----------------------------------------------------------- constants ----
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|c64)\[([0-9,]*)\]")
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-chip bytes each collective *sends*, from (post-SPMD) HLO text.
+
+    Optimized HLO prints operands without shapes, so we parse the RESULT
+    shape (a per-device shard — the post-SPMD program is per-device) and
+    convert per collective kind with the replica group size g (ring
+    algorithm accounting):
+      all-gather:      operand = result/g;  sends operand*(g-1)
+      reduce-scatter:  operand = result*g;  sends result*(g-1)
+      all-reduce:      sends 2*result*(g-1)/g  (ring RS+AG)
+      all-to-all:      sends result*(g-1)/g
+      collective-permute: sends result
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not (s.startswith("%") or s.startswith("ROOT")):
+            continue
+        m = re.search(
+            r"=\s*((?:bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|c64)"
+            r"\[[0-9,]*\])[^=]*?\s?"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+            r"(?:-start)?\(", s)
+        if not m:
+            continue
+        shp = _SHAPE_RE.match(m.group(1))
+        if not shp:
+            continue
+        dt, dims = shp.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        rbytes = n * _DTYPE_BYTES[dt]
+        kind = m.group(2)
+        gm = _GROUPS_RE.search(s)
+        g = max(2, int(gm.group(2))) if gm else 2
+        if kind == "all-gather":
+            sent = rbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            sent = rbytes * (g - 1)
+        elif kind == "all-reduce":
+            sent = 2 * rbytes * (g - 1) / g
+        elif kind == "all-to-all":
+            sent = rbytes * (g - 1) / g
+        else:  # collective-permute
+            sent = rbytes
+        out[kind] += float(sent)
+    return out
+
+
+# ------------------------------------------------------- input specs ------
+def input_specs(arch: str, shape: str, mesh: Mesh,
+                model: Optional[LM] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq_len
+    dp = data_pspec(mesh, b)
+    sd = lambda shp, dt, ps: jax.ShapeDtypeStruct(shp, dt, sharding=NamedSharding(mesh, ps))
+    use_embeds = cfg.frontend != "none"
+    out: Dict[str, Any] = {"spec": spec, "use_embeds": use_embeds}
+    if spec.kind in ("train", "prefill"):
+        if use_embeds:
+            out["tokens"] = sd((b, s, cfg.d_model), jnp.bfloat16, P(*dp, None, None))
+        else:
+            out["tokens"] = sd((b, s), jnp.int32, P(*dp, None))
+        out["targets"] = sd((b, s), jnp.int32, P(*dp, None))
+    else:  # decode: one new token against a seq_len cache
+        out["tokens"] = sd((b, 1), jnp.int32, P(*dp, None))
+        m = model or LM(cfg)
+        cache_shapes = jax.eval_shape(lambda: m.init_cache(b, s))
+        cspecs = cache_pspecs(cfg, cache_shapes, mesh, b)
+        out["cache"] = jax.tree.map(
+            lambda x, ps: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                               sharding=NamedSharding(mesh, ps)),
+            cache_shapes, cspecs)
+        out["cache_specs"] = cspecs
+        out["cache_pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+def _microbatches(cfg: ArchConfig, spec: ShapeSpec, mesh: Mesh) -> int:
+    """One batch row per data shard per microbatch (bounds activations +
+    full-vocab logits independently of model size)."""
+    dp_total = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                            if a in mesh.axis_names]))
+    return max(1, spec.global_batch // dp_total)
+
+
+# ------------------------------------------------------- step builders ----
+def build_cell_fn(cfg: ArchConfig, spec: ShapeSpec, mesh: Mesh,
+                  unroll: bool = False, groups_override: Optional[int] = None,
+                  microbatches: Optional[int] = None,
+                  optimizer: bool = True,
+                  calib_mb: Optional[int] = None):
+    """Returns (jitted fn, example args as ShapeDtypeStructs)."""
+    c = cfg
+    if groups_override is not None:
+        c = dataclasses.replace(
+            cfg, num_layers=groups_override * len(cfg.block_pattern))
+    # attention sharding hint: head-parallel when divisible, else context
+    # parallel over the query sequence (see kernels/ops.py)
+    from repro.kernels import ops as _ops
+
+    msize = int(mesh.shape.get("model", 1))
+    if cfg.num_heads > 0:
+        _ops.ATTN_SHARDING = (
+            "heads" if (cfg.num_heads % msize == 0
+                        and cfg.num_kv_heads % msize == 0) else "qseq")
+    else:
+        _ops.ATTN_SHARDING = None
+    dp_b = data_pspec(mesh, spec.global_batch)
+    _ops.BATCH_AXES = tuple(dp_b) if tuple(dp_b) != (None,) else None
+    model = LM(c, backend="jnp", remat="full", unroll_layers=unroll)
+    ins = input_specs(cfg.name, spec.name, mesh, model=model)
+    # NB: input_specs uses the original arch name; shapes don't depend on G.
+    b = spec.global_batch
+    dp = data_pspec(mesh, b)
+
+    if spec.kind == "train":
+        mb = microbatches if microbatches is not None else _microbatches(c, spec, mesh)
+        if optimizer:
+            step_fn, specs = build_train_step(
+                model, mesh, b, lr=1e-3, microbatches=mb,
+                use_embeds=ins["use_embeds"])
+            state_sds = jax.eval_shape(
+                lambda k: init_train_state(model, k),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            state_sds = jax.tree.map(
+                lambda x, sp: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                                   sharding=NamedSharding(mesh, sp)),
+                state_sds, specs)
+            return step_fn, (state_sds, ins["tokens"], ins["targets"]), mb
+        else:
+            # value-and-grad only at the PER-MICROBATCH batch size
+            # (roofline calibration: totals scale by the microbatch count
+            # and AdamW is added analytically)
+            mb_real = (calib_mb if calib_mb is not None
+                       else _microbatches(cfg, spec, mesh))
+            b_mb = max(1, b // mb_real)
+            pspec = param_pspecs(c, jax.eval_shape(
+                lambda k: model.init(k), jax.ShapeDtypeStruct((2,), jnp.uint32)),
+                model_axis_size=msize)
+
+            def vg(params, tok, tgt):
+                kw = {"embeds": tok} if ins["use_embeds"] else {"tokens": tok}
+
+                def loss_fn(p):
+                    logits, _, aux = model.forward(p, **kw)
+                    logp = jax.nn.log_softmax(logits, axis=-1)
+                    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+                    return nll.mean() + 0.01 * aux
+
+                l, g = jax.value_and_grad(loss_fn)(params)
+                g = jax.tree.map(
+                    lambda gr, sp: jax.lax.with_sharding_constraint(
+                        gr, NamedSharding(mesh, sp)), g, pspec)
+                return l, g
+
+            params_sds = jax.eval_shape(
+                lambda k: model.init(k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+            params_sds = jax.tree.map(
+                lambda x, sp: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                                   sharding=NamedSharding(mesh, sp)),
+                params_sds, pspec)
+            dp_mb = data_pspec(mesh, b_mb)
+            s_len = spec.seq_len
+            if ins["use_embeds"]:
+                tok_sds = jax.ShapeDtypeStruct(
+                    (b_mb, s_len, cfg.d_model), jnp.bfloat16,
+                    sharding=NamedSharding(mesh, P(*dp_mb, None, None)))
+            else:
+                tok_sds = jax.ShapeDtypeStruct(
+                    (b_mb, s_len), jnp.int32,
+                    sharding=NamedSharding(mesh, P(*dp_mb, None)))
+            tgt_sds = jax.ShapeDtypeStruct(
+                (b_mb, s_len), jnp.int32,
+                sharding=NamedSharding(mesh, P(*dp_mb, None)))
+            fn = jax.jit(vg)
+            return fn, (params_sds, tok_sds, tgt_sds), 1
+
+    # inference paths share the params pytree
+    params_sds = jax.eval_shape(
+        lambda k: model.init(k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspec = param_pspecs(c, params_sds, model_axis_size=msize)
+    params_sds = jax.tree.map(
+        lambda x, sp: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        params_sds, pspec)
+
+    if spec.kind == "prefill":
+        def prefill(params, tok):
+            kw = {"embeds": tok} if ins["use_embeds"] else {"tokens": tok}
+            logits, _, _ = model.forward(params, last_only=True, **kw)
+            return logits  # serving prefill emits last-position logits
+
+        return jax.jit(prefill), (params_sds, ins["tokens"]), 1
+
+    # decode
+    def serve_step(params, tok, cache, cache_pos):
+        logits, new_cache, _ = model.forward(
+            params, tokens=tok, cache=cache, cache_pos=cache_pos)
+        return logits, new_cache
+
+    fn = jax.jit(serve_step, donate_argnums=(2,))
+    return fn, (params_sds, ins["tokens"], ins["cache"], ins["cache_pos"]), 1
+
+
+# ------------------------------------------------------------ analysis ----
+def _analytic_adamw(cfg: ArchConfig) -> Dict[str, float]:
+    n = cfg.param_count()
+    return {"flops": 15.0 * n, "bytes": 22.0 * n}  # p(2B)+m,v(16B) rw + upd
+
+
+def analytic_hbm_bytes(cfg: ArchConfig, spec: ShapeSpec, mesh: Mesh,
+                       mb: int, cache_bytes_total: float = 0.0) -> float:
+    """Per-chip HBM traffic estimate (the memory roofline term).
+
+    XLA:CPU cost_analysis 'bytes accessed' sums operand+result bytes of
+    every HLO op with almost no fusion — a many-fold overcount of real
+    HBM<->chip traffic (on TPU most of those are VMEM hits).  We therefore
+    model HBM traffic explicitly (and report the HLO number as an upper
+    bound):
+      * weights: each chip streams its TP shard (1/model) of every weight
+        per pass; train does 3 passes per microbatch (fwd, remat-fwd, bwd)
+        + fp32 grad write/read + AdamW state (analytic, ZeRO-sharded);
+      * activations: ~24 residual-stream reads+writes per layer per token
+        (bf16), sharded over the mesh;
+      * logits: write+read of the (tokens, V/model) fp32 block per pass;
+      * decode: the whole sharded KV/SSM cache is read once, one slot
+        written.
+    """
+    chips = int(np.prod(list(mesh.shape.values())))
+    msize = int(mesh.shape.get("model", 1))
+    n = cfg.param_count()
+    w_pass = 2.0 * n / msize  # bf16 weights read per full pass, per chip
+    d = cfg.d_model
+    L = cfg.num_layers
+    tokens = spec.global_batch * spec.seq_len
+    tok_chip = tokens / chips
+    act = 24.0 * d * 2.0 * L * tok_chip  # residual-stream traffic
+    logits = tok_chip * cfg.vocab_size / msize * 4.0 * 2.0
+
+    if spec.kind == "train":
+        grads = 8.0 * n / chips  # fp32 write+read, ZeRO-sharded
+        opt = _analytic_adamw(cfg)["bytes"] / chips
+        return mb * (3.0 * w_pass) + mb * 3.0 * act + mb * 2.0 * logits + grads + opt
+    if spec.kind == "prefill":
+        return w_pass + act + logits / spec.seq_len  # last-position logits
+    # decode: one token per sequence
+    tok_chip = spec.global_batch / chips
+    act = 24.0 * d * 2.0 * L * tok_chip
+    logits = tok_chip * cfg.vocab_size / msize * 4.0 * 2.0
+    return w_pass + act + logits + cache_bytes_total / chips
+
+
+def lower_compile(fn, args) -> Tuple[Any, Any, float]:
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    compiled = lowered.compile()
+    return lowered, compiled, time.time() - t0
+
+
+def roofline_cell(arch: str, shape: str, calibrate: bool = True,
+                  skip_proof: bool = False, mesh=None,
+                  microbatches: Optional[int] = None,
+                  attn_impl: Optional[str] = None,
+                  grad_accum_dtype: Optional[str] = None) -> Dict[str, Any]:
+    from repro.kernels import ops as _o
+    from repro.train import train_step as _ts
+
+    if attn_impl is not None:
+        _o.ATTN_IMPL = attn_impl
+    if grad_accum_dtype is not None:
+        _ts.GRAD_ACCUM_DTYPE = grad_accum_dtype
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    mesh = mesh or make_production_mesh(multi_pod=False)
+    chips = int(np.prod(list(mesh.shape.values())))
+    res: Dict[str, Any] = {"arch": arch, "shape": shape,
+                           "mesh": "x".join(map(str, mesh.devices.shape)),
+                           "chips": chips,
+                           "variant": {"microbatches": microbatches,
+                                       "attn_impl": attn_impl,
+                                       "grad_accum_dtype": grad_accum_dtype}}
+
+    with jax.set_mesh(mesh):
+        # ---- proof compile (production form: scans + microbatching) ----
+        if not skip_proof:
+            fn, args, mb = build_cell_fn(cfg, spec, mesh, unroll=False,
+                                         microbatches=microbatches)
+            _, compiled, dt = lower_compile(fn, args)
+            ma = compiled.memory_analysis()
+            res["proof"] = {
+                "compile_s": round(dt, 1),
+                "microbatches": mb,
+                "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+                "output_bytes_per_device": int(ma.output_size_in_bytes),
+                "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+                "peak_hbm_gib": round(
+                    (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+            }
+            del compiled
+
+        # ---- calibration compiles (unrolled G=1, G=2; no optimizer) ----
+        if calibrate:
+            pts = {}
+            for g in (1, 2):
+                fn, args, _ = build_cell_fn(
+                    cfg, spec, mesh, unroll=True, groups_override=g,
+                    microbatches=1, optimizer=False,
+                    calib_mb=microbatches)
+                lowered, compiled, dt = lower_compile(fn, args)
+                ca = compiled.cost_analysis() or {}
+                coll = collective_bytes(compiled.as_text())
+                pts[g] = {
+                    "flops": float(ca.get("flops", 0.0)),
+                    "bytes": float(ca.get("bytes accessed", 0.0)),
+                    "coll": coll,
+                    "compile_s": round(dt, 1),
+                }
+                del compiled, lowered
+            G = cfg.num_groups
+            mb = (microbatches if microbatches is not None
+                  else _microbatches(cfg, spec, mesh)) if spec.kind == "train" else 1
+            lin = lambda a, b_: a + (G - 1) * (b_ - a)
+            # cost_analysis flops/bytes and the parsed collective bytes are
+            # all PER-DEVICE (the post-SPMD program); keep them per-chip.
+            flops = lin(pts[1]["flops"], pts[2]["flops"]) * mb
+            bytes_ = lin(pts[1]["bytes"], pts[2]["bytes"]) * mb
+            coll = {k: lin(pts[1]["coll"][k], pts[2]["coll"][k]) * mb
+                    for k in _COLLECTIVES}
+            if spec.kind == "train":
+                opt = _analytic_adamw(cfg)
+                flops += opt["flops"] / chips
+                bytes_ += opt["bytes"] / chips
+            res["calibration"] = {"g1": pts[1], "g2": pts[2],
+                                  "microbatch_factor": mb}
+            coll_total = sum(coll.values())
+            cache_bytes = 0.0
+            if spec.kind == "decode":
+                model = LM(cfg)
+                cshapes = jax.eval_shape(
+                    lambda: model.init_cache(spec.global_batch, spec.seq_len))
+                cache_bytes = float(sum(
+                    np.prod(x.shape) * x.dtype.itemsize
+                    for x in jax.tree.leaves(cshapes)))
+            mem_analytic = analytic_hbm_bytes(cfg, spec, mesh, mb, cache_bytes)
+            res["roofline"] = {
+                "hlo_flops_per_chip": flops,
+                "hlo_bytes_per_chip_upper": bytes_,
+                "hbm_bytes_per_chip_analytic": mem_analytic,
+                "collective_bytes_per_chip": coll_total,
+                "collectives": coll,
+                "t_compute_s": flops / PEAK_FLOPS,
+                "t_memory_s": mem_analytic / HBM_BW,
+                "t_memory_upper_s": bytes_ / HBM_BW,
+                "t_collective_s": coll_total / ICI_BW,
+            }
+            terms = res["roofline"]
+            dom = max(("t_compute_s", "t_memory_s", "t_collective_s"),
+                      key=lambda k: terms[k])
+            res["roofline"]["dominant"] = dom
+            # model FLOPs: 6ND train, 2ND inference (per fwd), global
+            nd = cfg.active_param_count()
+            tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)
+            model_flops = (6 if spec.kind == "train" else 2) * nd * tokens
+            res["roofline"]["model_flops_global"] = float(model_flops)
+            res["roofline"]["model_vs_hlo"] = float(
+                model_flops / max(flops * chips, 1.0))
+            # roofline fraction: useful model FLOPs over the time the
+            # dominant term forces the step to take
+            t_dom = max(res["roofline"][k] for k in
+                        ("t_compute_s", "t_memory_s", "t_collective_s"))
+            res["roofline"]["roofline_fraction"] = float(
+                (model_flops / chips / PEAK_FLOPS) / max(t_dom, 1e-12))
+    return res
+
+
+def proof_only(arch: str, shape: str, multi_pod: bool) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with jax.set_mesh(mesh):
+        fn, args, mb = build_cell_fn(cfg, spec, mesh, unroll=False)
+        _, compiled, dt = lower_compile(fn, args)
+        ma = compiled.memory_analysis()
+        return {
+            "arch": arch, "shape": shape,
+            "mesh": "x".join(map(str, mesh.devices.shape)),
+            "compile_s": round(dt, 1), "microbatches": mb,
+            "peak_hbm_gib": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+        }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--proof-only", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    if args.all:
+        for name, cfg in sorted(ARCHS.items()):
+            for spec in cells(cfg):
+                todo.append((name, spec.name))
+    else:
+        assert args.arch and args.shape
+        todo = [(args.arch, args.shape)]
+
+    for arch, shape in todo:
+        tag = f"{arch}_{shape}_{'multi' if args.multi_pod else 'single'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"skip {tag} (exists)")
+            continue
+        t0 = time.time()
+        try:
+            if args.proof_only or args.multi_pod:
+                res = proof_only(arch, shape, args.multi_pod)
+            else:
+                res = roofline_cell(arch, shape,
+                                    calibrate=not args.no_calibrate)
+            res["status"] = "ok"
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            res = {"arch": arch, "shape": shape, "status": "fail",
+                   "error": f"{type(e).__name__}: {e}"}
+        res["wall_s"] = round(time.time() - t0, 1)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+        print(json.dumps(res, indent=None, default=str)[:400])
+
+
+if __name__ == "__main__":
+    main()

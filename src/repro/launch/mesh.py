@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state — the dry-run must set XLA_FLAGS
+before the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axes: 'data' carries FSDP + batch, 'model' carries TP/EP; the 'pod'
+    axis is pure data parallelism whose gradient all-reduce crosses the
+    inter-pod (DCN) boundary once per step.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices the host actually has."""
+    return jax.make_mesh((data, model), ("data", "model"))

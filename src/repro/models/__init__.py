@@ -1,0 +1,4 @@
+"""Config-driven LM model zoo (pure JAX, scan-over-stacked-layers)."""
+from repro.models.lm import LM, init_params, make_model
+
+__all__ = ["LM", "init_params", "make_model"]

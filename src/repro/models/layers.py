@@ -1,0 +1,334 @@
+"""LM building blocks: norms, RoPE / M-RoPE, attention variants (GQA, MLA,
+sliding-window, softcap), SwiGLU MLP, GShard-style MoE, Mamba2 mixer.
+
+All functions are pure; parameters are explicit dicts.  Attention dispatches
+through kernels/ops.py so the same model runs with the Pallas kernel
+("interpret"/"pallas") or the jnp oracle ("jnp" — used by the dry-run so
+XLA cost_analysis sees the FLOPs).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5,
+             plus_one: bool = False) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w) if plus_one else w
+    return (y * scale).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float = 1e4
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> cos/sin (..., S, dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(pos3: jax.Array, sections: Sequence[int], dim: int,
+                  theta: float = 1e4) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE: pos3 (3, B, S); sections split dim/2 freq channels
+    into temporal / height / width groups, each rotated by its own position
+    component."""
+    cos, sin = rope_cos_sin(pos3, dim, theta)  # (3, B, S, dim/2)
+    secs = np.asarray(sections)
+    assert secs.sum() == dim // 2, (sections, dim)
+    comp = jnp.repeat(jnp.arange(3), jnp.asarray(secs), total_repeat_length=dim // 2)
+    take = jax.nn.one_hot(comp, 3, dtype=cos.dtype)  # (dim/2, 3)
+    cos = jnp.einsum("cbsd,dc->bsd", cos, take)
+    sin = jnp.einsum("cbsd,dc->bsd", sin, take)
+    return cos, sin
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, H, S, Dh); cos/sin (B, S, Dh/2) — rotate-half convention."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[:, None, :, :]
+    s = sin[:, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def gqa_attention(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, D)
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_scale: Optional[float] = None,
+    backend: str = "jnp",
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Standard GQA attention with optional KV cache (decode)."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(b, s, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(b, s, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cache is not None:
+        # decode: write new k/v at cache_pos, attend over the full cache
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, cache_pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, cache_pos, 0))
+        t = k_cache.shape[2]
+        kpos = jnp.arange(t)[None, :]
+        qpos = (cache_pos + jnp.arange(s))[:, None]
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        scale = q_scale if q_scale is not None else head_dim ** -0.5
+        g = num_heads // num_kv_heads
+        # grouped einsum: no (B, Hq, T, dh) repeat of the cache
+        qg = q.reshape(b, num_kv_heads, g, s, head_dim)
+        logits = jnp.einsum("bkgsd,bktd->bkgst", qg, k_cache) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        prob = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bkgst,bktd->bkgsd", prob, v_cache)
+        o = o.reshape(b, num_heads, s, head_dim)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        if q_scale is not None:
+            # ops.attention scales by 1/sqrt(dh); fold custom scale into q
+            q = q * (q_scale * head_dim ** 0.5)
+        o = ops.attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, backend=backend)
+        new_cache = None
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, num_heads * head_dim)
+    return o @ p["wo"], new_cache
+
+
+def mla_attention(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    num_heads: int,
+    head_dim: int,
+    rope_dim: int,
+    causal: bool = True,
+    backend: str = "jnp",
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+    K/V are compressed into a shared latent c_kv (rank r) plus a small
+    RoPE'd key part k_r shared across heads; the cache stores only
+    (c_kv, k_r) — (r + rope_dim) per token instead of 2*H*dh.
+    """
+    b, s, _ = x.shape
+    nope = head_dim - rope_dim
+    # queries (optionally via low-rank q, omitted: direct projection)
+    q = (x @ p["wq"]).reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+    q_n, q_r = q[..., :nope], q[..., nope:]
+    q_r = apply_rope(q_r, cos[..., : rope_dim // 2], sin[..., : rope_dim // 2])
+    # latent kv + shared rope key
+    c_kv = x @ p["w_dkv"]  # (B, S, r)
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+    k_r = (x @ p["w_kr"]).reshape(b, s, 1, rope_dim).transpose(0, 2, 1, 3)
+    k_r = apply_rope(k_r, cos[..., : rope_dim // 2], sin[..., : rope_dim // 2])
+
+    scale = head_dim ** -0.5
+    if cache is not None:
+        # --- decode: ABSORBED MLA ---------------------------------------
+        # Fold W_uk into the query and attend in the shared latent space:
+        # the cache stores only (c_kv, k_r); K/V are never expanded, so
+        # decode memory stays (r + rope) per token (the whole point of MLA).
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
+        k_r = jax.lax.dynamic_update_slice(
+            cache["k_r"], k_r.astype(cache["k_r"].dtype), (0, 0, cache_pos, 0))
+        new_cache = {"c_kv": c_kv, "k_r": k_r}
+        t = c_kv.shape[1]
+        rank = c_kv.shape[-1]
+        w = p["w_ukv"].reshape(rank, num_heads, 2 * nope)
+        wk, wv = w[..., :nope], w[..., nope:]
+        q_abs = jnp.einsum("bhsd,rhd->bhsr", q_n, wk.astype(q_n.dtype))
+        logits = (
+            jnp.einsum("bhsr,btr->bhst", q_abs, c_kv.astype(q_abs.dtype))
+            + jnp.einsum("bhsd,bltd->bhst", q_r, k_r.astype(q_r.dtype))
+        ) * scale
+        qpos = (cache_pos + jnp.arange(s))[:, None]
+        mask = jnp.arange(t)[None, :] <= qpos
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        prob = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bhsr", prob, c_kv.astype(prob.dtype))
+        o = jnp.einsum("bhsr,rhd->bhsd", o_lat, wv.astype(o_lat.dtype))
+    else:
+        # --- prefill/train: expand K/V from the latent (compute-optimal),
+        # then run the (chunked) attention core on [nope; rope] features so
+        # long sequences never materialize (S, T) logits.
+        new_cache = None
+        t = c_kv.shape[1]
+        kv = (c_kv @ p["w_ukv"]).reshape(b, t, num_heads, 2 * nope).transpose(0, 2, 1, 3)
+        k_n, v = kv[..., :nope], kv[..., nope:]
+        q_cat = jnp.concatenate([q_n, q_r], axis=-1)
+        k_cat = jnp.concatenate(
+            [k_n, jnp.broadcast_to(k_r, (b, num_heads, t, q_r.shape[-1]))], axis=-1)
+        from repro.kernels import ops as _ops
+
+        o = _ops.attention(q_cat, k_cat, v, causal=causal,
+                           backend=backend)
+        # ops.attention scales by 1/sqrt(nope+rope) == 1/sqrt(head_dim) ✓
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, num_heads * nope)
+    return o @ p["wo"], new_cache
+
+
+# ----------------------------------------------------------------- ffn -----
+def swiglu_mlp(p: Dict[str, jax.Array], x: jax.Array,
+               act=jax.nn.silu) -> jax.Array:
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def moe_ffn(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, D)
+    *,
+    num_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
+    """GShard-style grouped, capacity-based top-k MoE; returns (out, aux).
+
+    Tokens are split into groups of ``group_size``; each group dispatches
+    independently with capacity C = ceil(group*k*cf/E).  The dispatch
+    one-hot is therefore (G, Tg, E, C) sharded over G ('data') and E
+    ('model' = EP) — bounded per-device memory at any scale.  The per-slot
+    accumulation loop (k is 2..8) avoids materializing the (Tg, k, E, C)
+    rank-5 intermediate.  This grouped-contiguous dispatch is also where
+    the paper's restructuring insight lands for MoE (DESIGN.md §4): each
+    expert consumes a *dense* (C, D) block instead of scattered rows.
+    """
+    b, s, d = x.shape
+    t = b * s
+    assert t % group_size == 0, (t, group_size)
+    g = t // group_size
+    xt = ops.constrain_batch(x.reshape(g, group_size, d))
+    gates = jax.nn.softmax(xt @ p["w_router"], axis=-1)  # (G, Tg, E)
+    gate_vals, idx = jax.lax.top_k(gates, top_k)  # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    cap = max(int(np.ceil(group_size * top_k * capacity_factor / num_experts)), top_k)
+
+    onehot = jax.nn.one_hot(idx, num_experts, dtype=jnp.float32)  # (G, Tg, k, E)
+    # position of each (token, slot) in its expert queue (within the group)
+    pos = jnp.cumsum(onehot.reshape(g, group_size * top_k, num_experts), axis=1) - 1
+    pos = pos.reshape(g, group_size, top_k, num_experts)
+    keep = (pos < cap) & (onehot > 0)
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+
+    disp = jnp.zeros((g, group_size, num_experts, cap), x.dtype)
+    comb = jnp.zeros((g, group_size, num_experts, cap), x.dtype)
+    for i in range(top_k):  # k is small; avoids a rank-5 one-hot
+        sel = (onehot[:, :, i] * keep[:, :, i]).astype(x.dtype)  # (G, Tg, E)
+        poh = jax.nn.one_hot(pos[:, :, i], cap, dtype=x.dtype)  # (G, Tg, E, C)
+        term = sel[..., None] * poh  # (G, Tg, E, C)
+        disp = disp + term
+        comb = comb + term * gate_vals[:, :, i][:, :, None, None].astype(x.dtype)
+
+    xe = ops.constrain_batch(jnp.einsum("gtd,gtec->gecd", xt, disp))  # (G, E, C, D)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = ops.constrain_batch(jnp.einsum("gecf,efd->gecd", h, p["w_down"]))
+    out = ops.constrain_batch(
+        jnp.einsum("gtec,gecd->gtd", ops.constrain_batch(comb), ye)).reshape(b, s, d)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(gates, axis=(0, 1))
+    fe = jnp.mean(jax.nn.one_hot(idx[..., 0], num_experts), axis=(0, 1))
+    aux = num_experts * jnp.sum(me * fe)
+    return out, aux
+
+
+# --------------------------------------------------------------- mamba2 ----
+def mamba2_mixer(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, D)
+    *,
+    num_heads: int,
+    head_dim: int,
+    state_dim: int,
+    num_groups: int,
+    conv_width: int = 4,
+    chunk: int = 64,
+    backend: str = "jnp",
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Mamba2 block (SSD).  ``state`` enables single-step decode:
+    {"conv": (B, conv_width-1, conv_dim), "ssm": (B, H, P, N)}."""
+    b, s, d = x.shape
+    d_inner = num_heads * head_dim
+    conv_dim = d_inner + 2 * num_groups * state_dim
+
+    zxbcdt = x @ p["w_in"]  # (B, S, 2*d_inner + 2*g*n + h)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B, S, H)
+
+    if state is None:
+        # causal depthwise conv over (x, B, C)
+        pad = jnp.pad(xbc, ((0, 0), (conv_width - 1, 0), (0, 0)))
+        conv = sum(
+            pad[:, i : i + s] * p["w_conv"][i][None, None, :]
+            for i in range(conv_width)
+        ) + p["b_conv"]
+        new_conv_state = None
+    else:
+        hist = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, cw-1+s, ·)
+        conv = sum(
+            hist[:, i : i + s] * p["w_conv"][i][None, None, :]
+            for i in range(conv_width)
+        ) + p["b_conv"]
+        new_conv_state = hist[:, -(conv_width - 1):]
+    conv = jax.nn.silu(conv)
+
+    xs, bc = jnp.split(conv, [d_inner], axis=-1)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    xs = xs.reshape(b, s, num_heads, head_dim)
+    bmat = bmat.reshape(b, s, num_groups, state_dim)
+    cmat = cmat.reshape(b, s, num_groups, state_dim)
+    a_log = -jnp.exp(p["a_log"])[None, None, :] * dt  # (B, S, H), <= 0
+
+    if state is None:
+        y = ops.ssd(xs * dt[..., None], a_log, bmat, cmat,
+                    chunk=chunk, backend=backend)
+        new_ssm = None
+    else:
+        # single-step recurrence (s == 1 expected)
+        rep = num_heads // num_groups
+        bexp = jnp.repeat(bmat, rep, axis=2)[:, 0]  # (B, H, N)
+        cexp = jnp.repeat(cmat, rep, axis=2)[:, 0]
+        a = jnp.exp(a_log[:, 0])[:, :, None, None]  # (B, H, 1, 1)
+        upd = jnp.einsum("bhp,bhn->bhpn", (xs * dt[..., None])[:, 0], bexp)
+        new_ssm = a * state["ssm"] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", new_ssm, cexp)[:, None]
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])  # gated norm
+    out = y @ p["w_out"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv_state, "ssm": new_ssm}
+    return out, new_state

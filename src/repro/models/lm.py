@@ -1,0 +1,360 @@
+"""Config-driven LM: init + forward (train / prefill / decode) + loss.
+
+Layers are stacked per block-pattern position and executed with
+``jax.lax.scan`` over the stacked groups, so the HLO contains one
+super-block regardless of depth (62-layer models compile as fast as
+2-layer ones) and remat policy applies per group.
+
+Inputs are either token ids (B, S) or precomputed embeddings (B, S, D)
+(modality-frontend stubs for [audio]/[vlm] archs).  Decode carries a cache
+pytree stacked the same way as the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as _ops
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+
+def _init_dense(key, shape, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(jnp.bfloat16)
+
+
+def _init_block(key: jax.Array, cfg: ArchConfig, mixer: str, ffn: str) -> Dict:
+    ks = jax.random.split(key, 24)
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "ln1": jnp.zeros((d,), jnp.float32) if cfg.gemma_norms else jnp.ones((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32) if cfg.gemma_norms else jnp.ones((d,), jnp.float32),
+    }
+    if cfg.gemma_norms:
+        p["ln1_post"] = jnp.zeros((d,), jnp.float32)
+        p["ln2_post"] = jnp.zeros((d,), jnp.float32)
+    depth_scale = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    if mixer in ("attn", "local"):
+        p["mixer"] = {
+            "wq": _init_dense(ks[0], (d, cfg.num_heads * cfg.head_dim)),
+            "wk": _init_dense(ks[1], (d, cfg.num_kv_heads * cfg.head_dim)),
+            "wv": _init_dense(ks[2], (d, cfg.num_kv_heads * cfg.head_dim)),
+            "wo": _init_dense(ks[3], (cfg.num_heads * cfg.head_dim, d), depth_scale),
+        }
+    elif mixer == "mla":
+        nope = cfg.head_dim - cfg.mla_rope_dim
+        p["mixer"] = {
+            "wq": _init_dense(ks[0], (d, cfg.num_heads * cfg.head_dim)),
+            "w_dkv": _init_dense(ks[1], (d, cfg.mla_kv_rank)),
+            "kv_norm": jnp.ones((cfg.mla_kv_rank,), jnp.float32),
+            "w_kr": _init_dense(ks[2], (d, cfg.mla_rope_dim)),
+            "w_ukv": _init_dense(ks[3], (cfg.mla_kv_rank, cfg.num_heads * 2 * nope)),
+            "wo": _init_dense(ks[4], (cfg.num_heads * nope, d), depth_scale),
+        }
+    elif mixer == "ssm":
+        h, di, cd = cfg.ssm_heads, cfg.d_inner, cfg.conv_dim
+        p["mixer"] = {
+            "w_in": _init_dense(ks[0], (d, 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + h)),
+            "dt_bias": jnp.zeros((h,), jnp.float32),
+            "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(0) = -1
+            "w_conv": (jax.random.normal(ks[1], (cfg.conv_width, cd)) * 0.2).astype(jnp.float32),
+            "b_conv": jnp.zeros((cd,), jnp.float32),
+            "norm": jnp.ones((di,), jnp.float32),
+            "w_out": _init_dense(ks[2], (di, d), depth_scale),
+        }
+    else:
+        raise ValueError(mixer)
+
+    if ffn in ("mlp", "gelu_mlp"):
+        p["ffn"] = {
+            "w_gate": _init_dense(ks[8], (d, cfg.d_ff)),
+            "w_up": _init_dense(ks[9], (d, cfg.d_ff)),
+            "w_down": _init_dense(ks[10], (cfg.d_ff, d), depth_scale),
+        }
+        if ffn == "gelu_mlp":
+            p["ffn"].pop("w_gate")
+    elif ffn == "moe":
+        e, f = cfg.num_experts, cfg.moe_d_ff
+        p["ffn"] = {
+            "w_router": _init_dense(ks[8], (d, e)).astype(jnp.float32),
+            "w_gate": _init_dense(ks[9], (e, d, f)),
+            "w_up": _init_dense(ks[10], (e, d, f)),
+            "w_down": _init_dense(ks[11], (e, f, d), depth_scale),
+        }
+    elif ffn == "none":
+        pass
+    else:
+        raise ValueError(ffn)
+    return p
+
+
+@jax.custom_vjp
+def _embed_lookup(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    return embed[tokens]
+
+
+def _embed_lookup_fwd(embed, tokens):
+    return embed[tokens], (tokens, embed)  # embed res = alias, not a copy
+
+
+def _embed_lookup_bwd(res, dy):
+    """Vocab-sharded embedding gradient via one-hot matmul.
+
+    The default gather-transpose is a scatter-add that GSPMD materializes
+    as a full (V, D) f32 buffer PER DEVICE; the one-hot contraction keeps
+    the gradient born-sharded over the vocab ('model') axis — the MaxText
+    trick, applied in the backward only so the forward stays a cheap gather.
+    """
+    tokens, embed = res
+    onehot = jax.nn.one_hot(tokens, embed.shape[0], dtype=dy.dtype)
+    onehot = _ops.constrain_vocab(onehot)  # (..., V) with V on 'model'
+    de = jnp.einsum("...v,...d->vd", onehot, dy).astype(embed.dtype)
+    ct_tokens = np.zeros(tokens.shape, dtype=jax.dtypes.float0)
+    return de, ct_tokens
+
+
+_embed_lookup.defvjp(_embed_lookup_fwd, _embed_lookup_bwd)
+
+
+def padded_vocab(cfg: ArchConfig, multiple: int = 128) -> int:
+    """Vocab rounded up for even TP sharding (logits beyond vocab_size are
+    masked to -1e30 in forward; padded embedding rows are never gathered)."""
+    return -(-cfg.vocab_size // multiple) * multiple
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Dict:
+    """Parameter pytree; per-pattern-position leaves stacked over groups."""
+    k_embed, k_unembed, *_ = jax.random.split(key, 4)
+    vp = padded_vocab(cfg)
+    params: Dict[str, Any] = {
+        "embed": _init_dense(k_embed, (vp, cfg.d_model)),
+        "final_norm": (jnp.zeros if cfg.gemma_norms else jnp.ones)((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init_dense(k_unembed, (cfg.d_model, vp))
+    blocks = []
+    for pos, (mixer, ffn) in enumerate(cfg.block_pattern):
+        keys = jax.random.split(jax.random.fold_in(key, 100 + pos), cfg.num_groups)
+        blocks.append(jax.vmap(lambda k: _init_block(k, cfg, mixer, ffn))(keys))
+    params["blocks"] = blocks
+    return params
+
+
+def _positions_cos_sin(cfg: ArchConfig, positions, pos3=None):
+    if cfg.mrope_sections is not None:
+        if pos3 is None:
+            pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return L.mrope_cos_sin(pos3, cfg.mrope_sections, cfg.head_dim, cfg.rope_theta)
+    return L.rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def _block_apply(cfg: ArchConfig, mixer: str, ffn: str, p: Dict, x: jax.Array,
+                 cos, sin, backend: str, cache: Optional[Dict], cache_pos,
+                 ssd_chunk: int) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    gn = cfg.gemma_norms
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps, plus_one=gn)
+    new_cache = None
+    if mixer in ("attn", "local"):
+        window = cfg.sliding_window if mixer == "local" else None
+        o, new_cache = L.gqa_attention(
+            p["mixer"], h, cos, sin,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, causal=cfg.causal, window=window,
+            softcap=cfg.attn_softcap, q_scale=cfg.q_scale,
+            backend=backend, cache=cache, cache_pos=cache_pos)
+    elif mixer == "mla":
+        o, new_cache = L.mla_attention(
+            p["mixer"], h, cos, sin,
+            num_heads=cfg.num_heads, head_dim=cfg.head_dim,
+            rope_dim=cfg.mla_rope_dim, causal=cfg.causal,
+            backend=backend, cache=cache, cache_pos=cache_pos)
+    else:  # ssm
+        o, new_cache = L.mamba2_mixer(
+            p["mixer"], h,
+            num_heads=cfg.ssm_heads, head_dim=cfg.ssm_head_dim,
+            state_dim=cfg.ssm_state, num_groups=cfg.ssm_groups,
+            conv_width=cfg.conv_width, chunk=ssd_chunk,
+            backend=backend, state=cache)
+    if gn:
+        o = L.rms_norm(o, p["ln1_post"], cfg.norm_eps, plus_one=True)
+    x = x + o.astype(x.dtype)
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps, plus_one=gn)
+        if ffn == "mlp":
+            f = L.swiglu_mlp(p["ffn"], h2)
+        elif ffn == "gelu_mlp":
+            f = (jax.nn.gelu(h2 @ p["ffn"]["w_up"])) @ p["ffn"]["w_down"]
+        else:
+            f, aux = L.moe_ffn(
+                p["ffn"], h2, num_experts=cfg.num_experts,
+                top_k=cfg.experts_per_token,
+                group_size=min(cfg.moe_group_size, h2.shape[0] * h2.shape[1]))
+        if gn:
+            f = L.rms_norm(f, p["ln2_post"], cfg.norm_eps, plus_one=True)
+        x = x + f.astype(x.dtype)
+    return x, new_cache, aux
+
+
+class LM:
+    """Bound (config, functions) bundle — params stay an explicit pytree."""
+
+    def __init__(self, cfg: ArchConfig, backend: str = "jnp",
+                 remat: str = "full", ssd_chunk: int = 128,
+                 unroll_layers: bool = False):
+        """``unroll_layers``: python-loop the layer groups instead of
+        lax.scan.  Used by the dry-run's calibration lowerings — XLA
+        cost_analysis counts a while body once regardless of trip count,
+        so roofline FLOP/byte/collective totals are extracted from small
+        *unrolled* lowerings at G in {1, 2} and extrapolated linearly
+        (exact for homogeneous groups); the scan form is what ships."""
+        self.cfg = cfg
+        self.backend = backend
+        self.remat = remat
+        self.ssd_chunk = ssd_chunk
+        self.unroll_layers = unroll_layers
+
+    def init(self, key: jax.Array) -> Dict:
+        return init_params(key, self.cfg)
+
+    # ---------------------------------------------------------- forward ----
+    def forward(
+        self,
+        params: Dict,
+        tokens: Optional[jax.Array] = None,  # (B, S) int32
+        embeds: Optional[jax.Array] = None,  # (B, S, D)
+        pos3: Optional[jax.Array] = None,  # (3, B, S) M-RoPE position ids
+        cache: Optional[Dict] = None,
+        cache_pos: Optional[jax.Array] = None,
+        last_only: bool = False,  # serving prefill: logits for the last position only
+    ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+        """Returns (logits, new_cache, moe_aux)."""
+        cfg = self.cfg
+        if embeds is None:
+            x = _embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+            if cfg.gemma_norms:
+                x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        else:
+            x = embeds.astype(jnp.bfloat16)
+        x = _ops.constrain_batch(x)
+        b, s = x.shape[0], x.shape[1]
+        start = cache_pos if cache_pos is not None else 0
+        if (_ops.ATTN_IMPL == "cp_zigzag_native" and cache is None
+                and s % 32 == 0):
+            # zigzag-laid-out sequence: RoPE gets the logical positions
+            from repro.kernels.cp_attention import zigzag_positions
+
+            positions = jnp.asarray(zigzag_positions(s, 16))[None, :] \
+                + jnp.zeros((b, 1), jnp.int32)
+        else:
+            positions = start + jnp.arange(s)[None, :] + jnp.zeros((b, 1), jnp.int32)
+        cos, sin = _positions_cos_sin(cfg, positions, pos3)
+
+        pattern = cfg.block_pattern
+
+        def group_body(carry, xs):
+            x, aux = carry
+            x = _ops.constrain_batch(x)
+            gp, gcache = xs
+            new_gcache = [] if gcache is not None else None
+            for pos_idx, (mixer, ffn) in enumerate(pattern):
+                c_in = gcache[pos_idx] if gcache is not None else None
+                x, c_out, a = _block_apply(
+                    cfg, mixer, ffn, gp[pos_idx], x, cos, sin,
+                    self.backend, c_in, cache_pos, self.ssd_chunk)
+                if new_gcache is not None:
+                    new_gcache.append(c_out)
+                aux = aux + a
+            ys = tuple(new_gcache) if new_gcache is not None else None
+            return (x, aux), ys
+
+        body = group_body
+        if self.remat == "full":
+            body = jax.checkpoint(group_body)
+        elif self.remat == "dots":
+            body = jax.checkpoint(
+                group_body,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+        stacked = tuple(params["blocks"])  # tuple over pattern positions
+        if self.unroll_layers:
+            carry = (x, jnp.zeros((), jnp.float32))
+            caches_out = []
+            for g in range(cfg.num_groups):
+                gp = jax.tree.map(lambda a: a[g], stacked)
+                gc = jax.tree.map(lambda a: a[g], tuple(cache)) if cache is not None else None
+                carry, ys = body(carry, (gp, gc))
+                if ys is not None:
+                    caches_out.append(ys)
+            (x, aux) = carry
+            if cache is not None:
+                new_cache = list(jax.tree.map(lambda *zs: jnp.stack(zs), *caches_out))
+            else:
+                new_cache = None
+        elif cache is None:
+            # scan only over params
+            (x, aux), _ = jax.lax.scan(
+                lambda c, gp: (body(c, (gp, None))[0], None),
+                (x, jnp.zeros((), jnp.float32)), stacked)
+            new_cache = None
+        else:
+            (x, aux), new_cache = jax.lax.scan(
+                lambda c, xs_: body(c, xs_),
+                (x, jnp.zeros((), jnp.float32)), (stacked, tuple(cache)))
+            new_cache = list(new_cache)
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=cfg.gemma_norms)
+        if last_only:
+            x = x[:, -1:]
+        unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        logits = x @ unembed.astype(x.dtype)
+        logits = _ops.constrain_vocab(logits).astype(jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        if logits.shape[-1] != cfg.vocab_size:  # mask vocab padding
+            pad_mask = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+            logits = jnp.where(pad_mask, logits, -1e30)
+        return logits, new_cache, aux
+
+    # ------------------------------------------------------------ cache ----
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> list:
+        """Stacked cache pytree: one entry per pattern position, leaves with
+        leading ``num_groups`` dim (matches the params scan)."""
+        cfg = self.cfg
+        g = cfg.num_groups
+        cache = []
+        for mixer, _ in cfg.block_pattern:
+            if mixer in ("attn", "local"):
+                kv = (g, batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+                cache.append({"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)})
+            elif mixer == "mla":
+                cache.append({
+                    "c_kv": jnp.zeros((g, batch, max_len, cfg.mla_kv_rank), dtype),
+                    "k_r": jnp.zeros((g, batch, 1, max_len, cfg.mla_rope_dim), dtype),
+                })
+            else:  # ssm
+                cache.append({
+                    "conv": jnp.zeros((g, batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
+                    "ssm": jnp.zeros(
+                        (g, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                        jnp.float32),
+                })
+        return cache
+
+    # ------------------------------------------------------------- loss ----
+    def loss(self, params, tokens, targets, embeds=None, pos3=None,
+             aux_weight: float = 0.01) -> jax.Array:
+        logits, _, aux = self.forward(params, tokens=tokens, embeds=embeds, pos3=pos3)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return nll.mean() + aux_weight * aux
+
+
+def make_model(cfg: ArchConfig, backend: str = "jnp", remat: str = "full") -> LM:
+    return LM(cfg, backend=backend, remat=remat)

@@ -1,0 +1,4 @@
+"""Serving substrate: KV-cache engine, batched prefill/decode."""
+from repro.serve.engine import ServeEngine, Request
+
+__all__ = ["ServeEngine", "Request"]

@@ -1,0 +1,120 @@
+"""Batched serving engine: prefill + decode over a shared KV/SSM cache.
+
+The engine keeps a fixed-capacity batch of request slots (continuous
+batching: finished requests free their slot for the next queued request).
+``serve_step`` — one decode token for every live slot — is the function the
+decode_* input shapes lower (see launch/dryrun.py).
+
+Beyond-paper transfer (DESIGN.md §4): the admission queue groups requests
+by shared prompt prefix before slot assignment — requests in one group
+land in adjacent slots, so their KV blocks sit in adjacent cache rows (the
+Graph Restructurer's community-locality idea applied to the request x
+KV-block bipartite graph).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new: int = 16
+    out: Optional[List[int]] = None
+
+
+def _prefix_group_order(requests: List[Request], depth: int = 8) -> List[Request]:
+    """Sort the admission queue by prompt prefix (locality grouping)."""
+    return sorted(requests, key=lambda r: tuple(r.prompt[:depth].tolist()))
+
+
+class ServeEngine:
+    def __init__(self, model: LM, params, batch_slots: int, max_len: int,
+                 group_prefixes: bool = True):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.group_prefixes = group_prefixes
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.live: List[Optional[Request]] = [None] * batch_slots
+        self._decode = jax.jit(
+            lambda p, tok, cache, cpos: model.forward(
+                p, tokens=tok, cache=cache, cache_pos=cpos))
+
+    # ----------------------------------------------------------- admission -
+    def admit(self, requests: List[Request]) -> List[Request]:
+        """Fill free slots; returns the requests actually admitted."""
+        if self.group_prefixes:
+            requests = _prefix_group_order(requests)
+        admitted = []
+        qi = 0
+        for s in range(self.slots):
+            if self.live[s] is None and qi < len(requests):
+                r = requests[qi]
+                qi += 1
+                r.out = []
+                self.live[s] = r
+                self._prefill(s, r)
+                admitted.append(r)
+        return admitted
+
+    def _prefill(self, slot: int, r: Request):
+        # single-slot prefill: feed prompt tokens through the decode path
+        # one chunk at a time (token-level here; block prefill is the
+        # flash-attention path exercised by prefill_* shapes).
+        for i, t in enumerate(r.prompt.tolist()):
+            tok = jnp.full((self.slots, 1), 0, jnp.int32).at[slot, 0].set(t)
+            logits, self.cache, _ = self._decode(
+                self.params, tok, self.cache, jnp.int32(i))
+        self.pos[slot] = len(r.prompt)
+
+    # -------------------------------------------------------------- decode -
+    def step(self, greedy: bool = True) -> Dict[int, int]:
+        """One decode step for every live slot; returns {rid: token}."""
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, r in enumerate(self.live):
+            if r is not None and r.out:
+                toks[s, 0] = r.out[-1]
+            elif r is not None and len(r.prompt):
+                toks[s, 0] = int(r.prompt[-1])
+        cpos = int(self.pos.max()) if self.pos.max() else 0
+        logits, self.cache, _ = self._decode(
+            self.params, jnp.asarray(toks), self.cache, jnp.int32(cpos))
+        out = {}
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for s, r in enumerate(self.live):
+            if r is None:
+                continue
+            t = int(nxt[s])
+            r.out.append(t)
+            out[r.rid] = t
+            self.pos[s] += 1
+            if len(r.out) >= r.max_new or self.pos[s] >= self.max_len - 1:
+                self.live[s] = None  # free the slot (continuous batching)
+        return out
+
+    def run(self, requests: List[Request], max_steps: int = 64) -> Dict[int, List[int]]:
+        queue = list(requests)
+        done: Dict[int, List[int]] = {}
+        steps = 0
+        while (queue or any(self.live)) and steps < max_steps:
+            admitted = self.admit(queue)
+            queue = [r for r in queue if r not in admitted]
+            self.step()
+            for r in list(requests):
+                if r.out is not None and r not in queue and all(
+                    self.live[s] is not r for s in range(self.slots)
+                ):
+                    done[r.rid] = r.out
+            steps += 1
+        return done

@@ -1,0 +1,10 @@
+"""Training substrate: optimizer, data, checkpointing, fault tolerance."""
+from repro.train.optim import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from repro.train.data import SyntheticTokens
+from repro.train.checkpoint import CheckpointManager
+from repro.train.train_step import build_train_step, TrainState
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "SyntheticTokens", "CheckpointManager", "build_train_step", "TrainState",
+]
