@@ -1,0 +1,89 @@
+"""End-to-end frontend latency: host vs device SGB, cold vs cached pipeline.
+
+Reports, per dataset/workload:
+  * ``host_cold``    — numpy sorted-merge SGB + restructure + batch build;
+  * ``device_cold``  — the same plan lowered onto the ``spgemm_bsr`` Pallas
+                       kernel (interpret mode on CPU; the TPU path flips
+                       ``kernel_backend="pallas"``), plus tile-pruning
+                       counters;
+  * ``warm``         — the repeated request served from the semantic-graph
+                       cache (the multi-model / multi-target scenario);
+  * the cached-request speedup over the cold build (the pipeline's win).
+
+Run:  PYTHONPATH=src:. python benchmarks/pipeline_bench.py [scale]
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import List
+
+from benchmarks.common import row
+from repro.pipeline import FrontendPipeline, PipelineConfig, SemanticGraphCache
+
+WORKLOADS = {
+    "ACM": ["APA", "PAP", "PSP", "APSPA"],
+    "IMDB": ["MAM", "MDM", "MKM", "AMA"],
+    "DBLP": ["APA", "APVPA"],
+}
+
+
+def _run_once(pipe: FrontendPipeline, ds: str, targets, scale: float):
+    t0 = time.perf_counter()
+    res = pipe.run_dataset(ds, targets, scale=scale)
+    res.batches()  # include device batch build in end-to-end latency
+    return res, (time.perf_counter() - t0) * 1e6
+
+
+def bench_pipeline(scale: float = 0.25) -> List[str]:
+    from repro.pipeline.frontend import _dataset
+
+    out = []
+    for ds, targets in WORKLOADS.items():
+        # pre-generate the dataset so every timed region measures frontend
+        # work only (the memo would otherwise bill generation to the first
+        # cold run and skew the host-vs-device and cold-vs-warm ratios)
+        _dataset(ds, 0, float(scale))
+        # --- host backend, cold then warm (shared cache) ---
+        cache = SemanticGraphCache()
+        host = FrontendPipeline(
+            PipelineConfig(planner="ctt", backend="host"), cache=cache)
+        res_cold, us_cold = _run_once(host, ds, targets, scale)
+        res_warm, us_warm = _run_once(host, ds, targets, scale)
+        assert res_warm.sgb is None, "warm request should not re-run SGB"
+        speedup = us_cold / max(us_warm, 1e-9)
+        out.append(row(
+            f"pipeline/{ds}/host_cold", us_cold,
+            f"steps={len(res_cold.sgb.per_step)};"
+            f"macs={res_cold.sgb.cost.macs}"))
+        out.append(row(
+            f"pipeline/{ds}/warm", us_warm,
+            f"cached_speedup={speedup:.1f}x;"
+            f"hits={res_warm.cache_stats.hits}"))
+
+        # --- device backend, cold (fresh cache so SGB really runs) ---
+        dev = FrontendPipeline(
+            PipelineConfig(planner="ctt", backend="device",
+                           kernel_backend="interpret"),
+            cache=SemanticGraphCache())
+        res_dev, us_dev = _run_once(dev, ds, targets, scale)
+        st = res_dev.sgb.device_stats or {}
+        live = st.get("tile_pairs_live", 0)
+        total = st.get("tile_pairs_total", 0)
+        out.append(row(
+            f"pipeline/{ds}/device_cold", us_dev,
+            f"macs={res_dev.sgb.cost.macs};"
+            f"tiles_live={live}/{total};"
+            f"pruned={1.0 - live / max(total, 1):.2f}"))
+    return out
+
+
+def main() -> None:
+    scale = float(sys.argv[1]) if len(sys.argv) > 1 else 0.25
+    print("name,us_per_call,derived")
+    for line in bench_pipeline(scale):
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

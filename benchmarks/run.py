@@ -11,6 +11,7 @@ import time
 
 def main() -> None:
     from benchmarks import extra, paper_figures as pf
+    from benchmarks.pipeline_bench import bench_pipeline
 
     benches = [
         pf.bench_sgb_scaling,      # Fig. 2
@@ -25,6 +26,7 @@ def main() -> None:
         extra.bench_kernels,
         extra.bench_moe_dispatch,
         extra.bench_restructure_cost,
+        bench_pipeline,           # frontend pipeline: host/device/cached
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

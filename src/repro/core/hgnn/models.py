@@ -226,17 +226,19 @@ class HGNN:
         return jnp.mean(nll)
 
 
-def graphs_from_sgb(
-    graph: HetGraph,
+def package_batches(
     semantic: Dict[str, Relation],
     targets: List[str],
     restructured: bool = False,
+    restructured_graphs: Optional[Dict[str, "object"]] = None,
 ) -> List[SemanticGraphBatch]:
-    """Package SGB outputs for the model — optionally restructured.
+    """The one packaging path: semantic graphs -> model-ready batches.
 
-    With ``restructured=True`` each semantic graph goes through the Graph
-    Restructurer and its *scheduled* edge stream is used (same math, the
-    locality-optimized order the backend would consume).
+    Batches always carry *global* vertex ids (restructuring only reorders
+    the edge stream; features and output rows keep the original
+    numbering).  ``restructured_graphs`` supplies already-computed
+    ``RestructuredGraph`` objects (the pipeline cache's), skipping the
+    recompute.
     """
     from repro.core.restructure import restructure as _restructure
 
@@ -244,10 +246,36 @@ def graphs_from_sgb(
     for i, mp in enumerate(sorted(targets)):
         rel = semantic[mp]
         if restructured:
-            rg = _restructure(rel)
+            rg = (restructured_graphs or {}).get(mp)
+            if rg is None:
+                rg = _restructure(rel)
             s, d = rg.scheduled_edges()
             out.append(SemanticGraphBatch.from_edge_stream(
                 mp, rel.num_src, rel.num_dst, s, d, i))
         else:
             out.append(SemanticGraphBatch.from_relation(rel, mp, i))
     return out
+
+
+def graphs_from_sgb(
+    graph: HetGraph,
+    semantic: Dict[str, Relation],
+    targets: List[str],
+    restructured: bool = False,
+    restructured_graphs: Optional[Dict[str, "object"]] = None,
+) -> List[SemanticGraphBatch]:
+    """Package SGB outputs for the model — optionally restructured.
+
+    With ``restructured=True`` each semantic graph goes through the Graph
+    Restructurer and its *scheduled* edge stream is used (same math, the
+    locality-optimized order the backend would consume).
+    """
+    del graph  # packaging depends only on the semantic graphs
+    return package_batches(semantic, targets, restructured=restructured,
+                           restructured_graphs=restructured_graphs)
+
+
+def graphs_from_pipeline(result) -> List[SemanticGraphBatch]:
+    """Batches from a ``pipeline.FrontendResult`` — built once on the
+    result and shared by every model (multi-model scenario)."""
+    return result.batches()

@@ -235,6 +235,23 @@ class RestructuredGraph:
         dperm[dperm < 0] = np.arange(dc, dc + int((dperm < 0).sum()))
         return sperm, dperm
 
+    def packed(self, renumbered: bool = True,
+               weight: Optional[np.ndarray] = None):
+        """Banded ``PackedEdges`` blocks for the NA kernel (seg_sum).
+
+        Built from the scheduled (by default renumbered) edge stream —
+        the layout where the restructurer's community bands are
+        contiguous, so the packer emits the fewest blocks.  The pipeline
+        caches this per semantic graph: every HGNN model consuming the
+        graph shares one packing instead of re-deriving it.
+        """
+        from repro.kernels.seg_sum import pack_edge_blocks
+
+        s, d = self.scheduled_edges(renumbered=renumbered)
+        return pack_edge_blocks(
+            s, d, self.original.num_src, self.original.num_dst,
+            weight=weight)
+
     def validate(self) -> None:
         """Invariants of §4.3.1 (used by tests and asserted in benchmarks)."""
         rel = self.original

@@ -21,6 +21,8 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.ctt import CallbackTrieTree
 from repro.hetero.graph import CompositionCost, HetGraph, Relation, compose_relations
 
@@ -80,6 +82,7 @@ def plan_ctt(
     graph: HetGraph,
     targets: Sequence[str],
     cache_intermediates: bool = False,
+    preloaded: Sequence[str] = (),
 ) -> Plan:
     """CTT-guided generation (§4.2): reuse materialized semantic graphs.
 
@@ -88,10 +91,18 @@ def plan_ctt(
     generated it is inserted into the CTT; with ``cache_intermediates`` the
     fold's intermediate products are inserted too (beyond-paper knob —
     trades CTT-buffer/HBM footprint for more reuse).
+
+    ``preloaded`` seeds the CTT with already-materialized metapaths (the
+    pipeline's semantic-graph cache): decomposition reuses them exactly as
+    if an earlier target in this plan had produced them, so a warm cache
+    shrinks the plan — possibly to zero steps.
     """
     ctt = CallbackTrieTree(graph.relation_names)
     steps: List[PlanStep] = []
     produced = set(graph.relation_names)
+    for p in preloaded:
+        ctt.insert(p)
+        produced.add(p)
     for t in sorted(targets, key=lambda m: (len(m), m)):
         _check_valid(graph, t)
         segs = ctt.decompose(t)
@@ -111,6 +122,7 @@ def plan_ctt_dp(
     graph: HetGraph,
     targets: Sequence[str],
     edge_counts: Optional[Dict[str, int]] = None,
+    preloaded: Sequence[str] = (),
 ) -> Plan:
     """Beyond-paper: optimal segmentation via DP instead of greedy walk.
 
@@ -119,6 +131,8 @@ def plan_ctt_dp(
     Prediction uses known edge counts when available (one-hop counts are
     always known; longer segments once produced get their true counts),
     falling back to #compositions.  Intermediates are always cached.
+    ``preloaded`` seeds the materialized set (see :func:`plan_ctt`); pass
+    their edge counts via ``edge_counts`` for accurate cost prediction.
     """
     ctt = CallbackTrieTree(graph.relation_names)
     known: Dict[str, int] = dict(edge_counts or {})
@@ -126,6 +140,9 @@ def plan_ctt_dp(
         known.setdefault(r, graph.relation(r).num_edges)
     steps: List[PlanStep] = []
     produced = set(graph.relation_names)
+    for p in preloaded:
+        ctt.insert(p)
+        produced.add(p)
 
     def seg_cost(seg: str) -> float:
         return float(known.get(seg, 10 * max(known.values())))
@@ -171,22 +188,135 @@ class SGBResult:
     cost: CompositionCost  # total MACs + bytes
     per_step: List[Tuple[PlanStep, CompositionCost]]
     wall_seconds: float
+    backend: str = "host"
+    device_stats: Optional[Dict[str, int]] = None  # tile-pruning counters
 
     def target_graphs(self, targets: Sequence[str]) -> Dict[str, Relation]:
         return {t: self.graphs[t] for t in targets}
 
 
-def execute_plan(graph: HetGraph, plan: Plan) -> SGBResult:
+class DeviceComposer:
+    """PlanStep executor lowered onto the ``spgemm_bsr`` Pallas kernel.
+
+    Relations live as tile-padded dense 0/1 matrices plus tile-occupancy
+    bitmaps for the whole plan: one-hop inputs are densified lazily on
+    first use, every intermediate stays padded on device, and step outputs
+    are converted back to edge lists once, after the whole plan runs.  The
+    MAC counter uses the exact join-pair formula (colsum_A · rowsum_B over
+    the middle type), so device costs are bit-identical to the host
+    sorted-merge join's — the two backends differ only in *where* the
+    composition runs.
+
+    ``kernel_backend``: "pallas" (TPU), "interpret" (kernel body on CPU),
+    or "jnp" (dense oracle — fastest CPU validation path).
+    """
+
+    def __init__(
+        self,
+        graph: HetGraph,
+        kernel_backend: str = "interpret",
+        preloaded: Optional[Dict[str, Relation]] = None,
+    ):
+        if kernel_backend not in ("pallas", "interpret", "jnp"):
+            raise ValueError(f"unknown kernel_backend {kernel_backend!r}")
+        self.graph = graph
+        self.kernel_backend = kernel_backend
+        self._preloaded = dict(preloaded or {})
+        # name -> (padded dense, occupancy, (rows, cols))
+        self._mats: Dict[str, Tuple] = {}
+        self.stats: Dict[str, int] = {
+            "tile_pairs_total": 0, "tile_pairs_live": 0, "compositions": 0,
+        }
+
+    def _get(self, name: str):
+        from repro.kernels.spgemm_bsr import pad_to_tiles, tile_occupancy
+
+        if name not in self._mats:
+            rel = self._preloaded.get(name) or self.graph.relation(name)
+            padded = pad_to_tiles(rel.dense())
+            self._mats[name] = (padded, tile_occupancy(padded),
+                                (rel.num_src, rel.num_dst))
+        return self._mats[name]
+
+    def compose(self, step: PlanStep) -> CompositionCost:
+        from repro.kernels import ops, ref
+
+        a, ao, (m, k) = self._get(step.left)
+        b, bo, (k2, n) = self._get(step.right)
+        if k != k2:
+            raise ValueError(f"middle-type cardinality mismatch in {step!r}")
+        macs = ref.spgemm_macs_ref(a, b)
+        out, occ, st = ops.compose_boolean_padded(
+            a, b, ao, bo, backend=self.kernel_backend)
+        self.stats["tile_pairs_total"] += st.get("tile_pairs_total", 0)
+        self.stats["tile_pairs_live"] += st.get("tile_pairs_live", 0)
+        self.stats["compositions"] += 1
+        self._mats[step.out] = (out, occ, (m, n))
+        # edge counts straight off the dense forms (padding is all-zero);
+        # byte accounting matches Relation.nbytes (2 int32 per edge)
+        left_edges = int(np.count_nonzero(a))
+        right_edges = int(np.count_nonzero(b))
+        out_edges = int(np.count_nonzero(out))
+        return CompositionCost(
+            macs=macs,
+            bytes_read=(left_edges + right_edges) * 2 * 4,
+            bytes_written=out_edges * 2 * 4,
+        )
+
+    def extract(self, name: str) -> Relation:
+        """Materialized metapath -> canonical edge-list relation."""
+        dense, _, (rows, cols) = self._mats[name]
+        src_t, dst_t = name[0], name[-1]
+        return Relation.from_dense(src_t, dst_t, dense[:rows, :cols])
+
+
+def execute_plan(
+    graph: HetGraph,
+    plan: Plan,
+    backend: str = "host",
+    kernel_backend: str = "interpret",
+    preloaded: Optional[Dict[str, Relation]] = None,
+) -> SGBResult:
     """Run every composition step; count exact MACs/bytes.
+
+    ``backend="host"`` joins edge lists with the numpy sorted-merge oracle;
+    ``backend="device"`` lowers each step onto the block-sparse SpGEMM
+    Pallas kernel (see :class:`DeviceComposer`).  Both produce
+    edge-identical relations and identical MAC counts.
+
+    ``preloaded`` supplies already-materialized semantic graphs (from the
+    pipeline cache) that a cache-aware plan may reference as step inputs.
 
     The naive plan intentionally re-executes duplicated steps (that is the
     redundancy the CTT removes); materialized results are still keyed by
     name, so re-execution overwrites with an identical graph.
     """
+    if backend not in ("host", "device"):
+        raise ValueError(f"unknown backend {backend!r}")
     t0 = time.perf_counter()
-    mats: Dict[str, Relation] = dict(graph.relations)
     total = CompositionCost.zero()
     per_step: List[Tuple[PlanStep, CompositionCost]] = []
+    mats: Dict[str, Relation] = dict(graph.relations)
+    if preloaded:
+        mats.update(preloaded)
+    if backend == "device":
+        composer = DeviceComposer(
+            graph, kernel_backend=kernel_backend, preloaded=preloaded)
+        for st in plan.steps:
+            cost = composer.compose(st)
+            total = total + cost
+            per_step.append((st, cost))
+        # unique outputs only: the naive plan duplicates steps by design
+        for out_name in {st.out for st in plan.steps}:
+            mats[out_name] = composer.extract(out_name)
+        return SGBResult(
+            graphs=mats,
+            cost=total,
+            per_step=per_step,
+            wall_seconds=time.perf_counter() - t0,
+            backend="device",
+            device_stats=dict(composer.stats),
+        )
     for st in plan.steps:
         left, right = mats[st.left], mats[st.right]
         out, cost = compose_relations(left, right)
@@ -198,23 +328,40 @@ def execute_plan(graph: HetGraph, plan: Plan) -> SGBResult:
         cost=total,
         per_step=per_step,
         wall_seconds=time.perf_counter() - t0,
+        backend="host",
     )
+
+
+def make_plan(
+    graph: HetGraph,
+    targets: Sequence[str],
+    planner: str = "ctt",
+    preloaded: Sequence[str] = (),
+    edge_counts: Optional[Dict[str, int]] = None,
+) -> Plan:
+    """Dispatch to a planner by name. ``planner`` in {naive, ctt, ctt_cache,
+    ctt_dp}; ``preloaded`` metapaths seed the CTT planners (cache reuse)."""
+    if planner == "naive":
+        return plan_naive(graph, targets)
+    if planner == "ctt":
+        return plan_ctt(graph, targets, preloaded=preloaded)
+    if planner == "ctt_cache":
+        return plan_ctt(graph, targets, cache_intermediates=True,
+                        preloaded=preloaded)
+    if planner == "ctt_dp":
+        return plan_ctt_dp(graph, targets, edge_counts=edge_counts,
+                           preloaded=preloaded)
+    raise ValueError(f"unknown planner {planner!r}")
 
 
 def build_semantic_graphs(
     graph: HetGraph,
     targets: Sequence[str],
     planner: str = "ctt",
+    backend: str = "host",
+    kernel_backend: str = "interpret",
 ) -> SGBResult:
     """One-call SGB stage: plan + execute. ``planner`` in {naive, ctt, ctt_dp}."""
-    if planner == "naive":
-        plan = plan_naive(graph, targets)
-    elif planner == "ctt":
-        plan = plan_ctt(graph, targets)
-    elif planner == "ctt_cache":
-        plan = plan_ctt(graph, targets, cache_intermediates=True)
-    elif planner == "ctt_dp":
-        plan = plan_ctt_dp(graph, targets)
-    else:
-        raise ValueError(f"unknown planner {planner!r}")
-    return execute_plan(graph, plan)
+    plan = make_plan(graph, targets, planner=planner)
+    return execute_plan(graph, plan, backend=backend,
+                        kernel_backend=kernel_backend)

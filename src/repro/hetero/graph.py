@@ -124,6 +124,21 @@ class Relation:
         a[self.src, self.dst] = 1
         return a
 
+    @staticmethod
+    def from_dense(
+        src_type: str, dst_type: str, dense: np.ndarray
+    ) -> "Relation":
+        """Inverse of :meth:`dense`: 0/1 adjacency -> canonical relation.
+
+        ``np.nonzero`` walks row-major, so the edge list comes out already
+        in the canonical (src, dst) sort order.
+        """
+        src, dst = np.nonzero(np.asarray(dense) > 0)
+        return Relation(
+            src_type, dst_type, int(dense.shape[0]), int(dense.shape[1]),
+            src.astype(IDX), dst.astype(IDX),
+        )
+
 
 def compose_relations(
     r1: Relation, r2: Relation
@@ -185,6 +200,34 @@ class HetGraph:
     feature_dims: Dict[str, int]  # vertex type -> raw feature dim (0 = featureless)
     relations: Dict[str, Relation]  # "AP" -> Relation(A->P)
     features: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    _fingerprint: Optional[str] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def fingerprint(self) -> str:
+        """Stable content hash of the topology (cache key for pipeline/).
+
+        Covers vertex counts and every relation's edge list — two graphs
+        with the same fingerprint have identical frontend products
+        (semantic graphs, restructure permutations), regardless of how
+        they were constructed.  Features are deliberately excluded: the
+        frontend operates on topology only.
+        """
+        if self._fingerprint is None:
+            import hashlib
+
+            h = hashlib.blake2b(digest_size=16)
+            for t in self.vertex_types:
+                h.update(f"{t}:{self.num_vertices[t]};".encode())
+            for rname in self.relation_names:
+                r = self.relations[rname]
+                # length-delimited records: name/edge-count prefix keeps
+                # distinct (name, edges) sequences from colliding byte-wise
+                h.update(f"{rname}:{r.num_edges};".encode())
+                h.update(np.ascontiguousarray(r.src).tobytes())
+                h.update(np.ascontiguousarray(r.dst).tobytes())
+            object.__setattr__(
+                self, "_fingerprint", f"{self.name}-{h.hexdigest()}")
+        return self._fingerprint
 
     @property
     def vertex_types(self) -> List[str]:

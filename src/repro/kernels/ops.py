@@ -213,3 +213,24 @@ def compose_boolean(
                               jnp.asarray(b_dense, jnp.float32))
         return np.asarray(out), {}
     return compose_dense_blocked(a_dense, b_dense, interpret=_interpret(backend))
+
+
+def compose_boolean_padded(
+    a: np.ndarray,  # (Mp, Kp) 0/1, tile-padded
+    b: np.ndarray,  # (Kp, Np) 0/1, tile-padded
+    a_occ: np.ndarray,
+    b_occ: np.ndarray,
+    backend: str = DEFAULT_BACKEND,
+) -> Tuple[np.ndarray, np.ndarray, dict]:
+    """SGB composition over pre-padded operands with cached occupancy —
+    the device executor's chain primitive (see ``core.sgb.DeviceComposer``).
+    Returns (padded result, its occupancy, pruning stats)."""
+    from repro.kernels.spgemm_bsr import compose_padded_blocked, tile_occupancy
+
+    if backend == "jnp":
+        out = np.asarray(jax.block_until_ready(
+            _ref.spgemm_ref(jnp.asarray(a, jnp.float32),
+                            jnp.asarray(b, jnp.float32))))
+        return out, tile_occupancy(out), {}
+    return compose_padded_blocked(a, b, a_occ, b_occ,
+                                  interpret=_interpret(backend))

@@ -35,6 +35,20 @@ def spgemm_ref(a_dense: jax.Array, b_dense: jax.Array) -> jax.Array:
     return (a_dense @ b_dense > 0).astype(jnp.float32)
 
 
+def spgemm_macs_ref(a_dense: np.ndarray, b_dense: np.ndarray) -> int:
+    """Exact join-pair count of the boolean product A @ B.
+
+    For every middle vertex k the join emits colsum_A[k] * rowsum_B[k]
+    output pairs (before dedup) — identical to the MAC counter of the
+    host sorted-merge join in ``hetero.graph.compose_relations``, so the
+    device SGB backend's cost model stays bit-equal to the host one.
+    """
+    col_a = (np.asarray(a_dense) > 0).sum(axis=0).astype(np.int64)
+    row_b = (np.asarray(b_dense) > 0).sum(axis=1).astype(np.int64)
+    k = min(col_a.shape[0], row_b.shape[0])  # operands may be tile-padded
+    return int(col_a[:k] @ row_b[:k])
+
+
 def attention_chunked(
     q: jax.Array,  # (B, Hq, S, Dh)
     k: jax.Array,  # (B, Hkv, T, Dh)

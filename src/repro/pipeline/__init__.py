@@ -1,0 +1,17 @@
+"""Frontend pipeline subsystem: SGB -> Restructure -> GFP as one cached,
+device-capable execution engine (the SiHGNN accelerator frontend as a
+software system; see frontend.py for the stage map).
+"""
+from repro.pipeline.cache import (CacheStats, SemanticGraphCache,
+                                  default_cache)
+from repro.pipeline.frontend import (FrontendPipeline, FrontendResult,
+                                     PipelineConfig)
+
+__all__ = [
+    "CacheStats",
+    "SemanticGraphCache",
+    "default_cache",
+    "FrontendPipeline",
+    "FrontendResult",
+    "PipelineConfig",
+]

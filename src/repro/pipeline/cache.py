@@ -1,0 +1,144 @@
+"""Semantic-graph cache: frontend products keyed by topology fingerprint.
+
+The multi-model and multi-target scenarios (several HGNNs over one HetG,
+repeated serving requests over the same dataset) re-ask the frontend for
+the same metapaths.  Everything the frontend produces is a pure function
+of the topology, so products are cached under
+``(HetGraph.fingerprint(), metapath[, layout knobs])``:
+
+  * materialized semantic graphs (``Relation``) — reusable across
+    planners and backends (all planners produce edge-identical graphs);
+  * restructure results (``RestructuredGraph``) keyed additionally by the
+    (degree_order, affinity) layout knobs;
+  * ``PackedEdges`` blocks keyed additionally by the renumbered flag.
+
+The cache is process-wide by default (``default_cache()``); pipelines can
+carry a private instance instead.  Eviction is LRU by entry count —
+entries hold numpy arrays only (no jax buffers), so footprint scales with
+edge counts, and ``nbytes()`` reports it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Hashable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.restructure import RestructuredGraph
+from repro.hetero.graph import HetGraph, Relation
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.hits + self.misses)
+
+    def snapshot(self) -> "CacheStats":
+        return CacheStats(self.hits, self.misses, self.evictions)
+
+    def delta(self, before: "CacheStats") -> "CacheStats":
+        return CacheStats(
+            self.hits - before.hits,
+            self.misses - before.misses,
+            self.evictions - before.evictions,
+        )
+
+
+class SemanticGraphCache:
+    """LRU cache of frontend products for reuse across requests/models."""
+
+    def __init__(self, max_entries: Optional[int] = 4096):
+        self.max_entries = max_entries
+        self._store: "OrderedDict[Tuple, object]" = OrderedDict()
+        self.stats = CacheStats()
+
+    # ---------------------------------------------------------- plumbing --
+    def _get(self, key: Tuple):
+        if key in self._store:
+            self.stats.hits += 1
+            self._store.move_to_end(key)
+            return self._store[key]
+        self.stats.misses += 1
+        return None
+
+    def _put(self, key: Tuple, value) -> None:
+        self._store[key] = value
+        self._store.move_to_end(key)
+        if self.max_entries is not None:
+            while len(self._store) > self.max_entries:
+                self._store.popitem(last=False)
+                self.stats.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def clear(self) -> None:
+        self._store.clear()
+
+    def nbytes(self) -> int:
+        """Approximate resident bytes (numpy payloads of cached entries)."""
+        total = 0
+        for v in self._store.values():
+            if isinstance(v, Relation):
+                total += v.nbytes
+            elif isinstance(v, RestructuredGraph):
+                total += v.original.nbytes
+                for sg in v.subgraphs:
+                    total += sg.src.nbytes + sg.dst.nbytes
+                    total += sg.src_ids.nbytes + sg.dst_ids.nbytes
+            else:
+                for a in vars(v).values() if dataclasses.is_dataclass(v) else ():
+                    if isinstance(a, np.ndarray):
+                        total += a.nbytes
+        return total
+
+    # ----------------------------------------------------------- typed API --
+    def get_relation(self, fp: str, metapath: str) -> Optional[Relation]:
+        return self._get(("rel", fp, metapath))
+
+    def relations_for(self, fp: str) -> Dict[str, Relation]:
+        """Every cached semantic graph for one topology (no stats impact) —
+        the cache-aware planner's preloaded set."""
+        return {k[2]: v for k, v in self._store.items()
+                if k[0] == "rel" and k[1] == fp}
+
+    def put_relation(self, fp: str, metapath: str, rel: Relation) -> None:
+        self._put(("rel", fp, metapath), rel)
+
+    def get_restructured(
+        self, fp: str, metapath: str, degree_order: bool, affinity: str
+    ) -> Optional[RestructuredGraph]:
+        return self._get(("rst", fp, metapath, degree_order, affinity))
+
+    def put_restructured(
+        self, fp: str, metapath: str, degree_order: bool, affinity: str,
+        rg: RestructuredGraph,
+    ) -> None:
+        self._put(("rst", fp, metapath, degree_order, affinity), rg)
+
+    def get_packed(self, fp: str, metapath: str, degree_order: bool,
+                   affinity: str, renumbered: bool):
+        return self._get(("pkd", fp, metapath, degree_order, affinity,
+                          renumbered))
+
+    def put_packed(self, fp: str, metapath: str, degree_order: bool,
+                   affinity: str, renumbered: bool, packed) -> None:
+        self._put(("pkd", fp, metapath, degree_order, affinity, renumbered),
+                  packed)
+
+
+_DEFAULT: Optional[SemanticGraphCache] = None
+
+
+def default_cache() -> SemanticGraphCache:
+    """The process-wide cache shared by pipelines constructed without one."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = SemanticGraphCache()
+    return _DEFAULT

@@ -1,0 +1,49 @@
+"""Shared test fixtures and tier configuration.
+
+Tiers (configured in pyproject.toml's ``addopts``):
+  * tier-1: ``pytest -x -q`` — everything not marked ``slow``; budget
+    well under two minutes on CPU.
+  * slow:   ``pytest -m slow`` — training convergence and large-arch
+    smokes.
+
+Dataset fixtures are session-scoped at reduced ``scale`` so each graph is
+generated once per run; tests that only need *a* heterogeneous graph (not
+a specific size) should take one of these instead of calling
+``make_dataset`` inline.
+"""
+import pytest
+
+from repro.hetero import make_dataset
+
+
+def pytest_configure(config):
+    # Registered in pyproject.toml too; kept here so a bare `pytest tests`
+    # invocation from another rootdir still knows the markers.
+    config.addinivalue_line(
+        "markers", "slow: heavy cases excluded from tier-1")
+    config.addinivalue_line(
+        "markers", "fast: explicitly cheap cases")
+
+
+@pytest.fixture(scope="session")
+def acm_small():
+    """ACM at scale 0.15 — the smallest graph with all 4 vertex types."""
+    return make_dataset("ACM", scale=0.15)
+
+
+@pytest.fixture(scope="session")
+def acm_mid():
+    """ACM at scale 0.3 — big enough for cost-model comparisons."""
+    return make_dataset("ACM", scale=0.3)
+
+
+@pytest.fixture(scope="session")
+def imdb_small():
+    """IMDB at scale 0.2 — movie-centric metapaths (MAM/MDM/MKM)."""
+    return make_dataset("IMDB", scale=0.2)
+
+
+@pytest.fixture(scope="session")
+def dblp_small():
+    """DBLP at scale 0.1 — the heavy-tailed V-P relation at test size."""
+    return make_dataset("DBLP", scale=0.1)

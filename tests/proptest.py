@@ -1,0 +1,38 @@
+"""Property-test harness that degrades gracefully without ``hypothesis``.
+
+``hypothesis`` is an optional ``[test]`` extra (see pyproject.toml).  When
+installed, ``seeded_property`` is hypothesis' ``@given`` over a seed
+integer (randomized search + shrinking).  When missing, the same test
+function runs over a fixed seed grid — fewer cases, zero extra deps, the
+invariants still exercised — instead of failing collection.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+# Spread over the seed space; includes 0 (edge-case-prone) and a few
+# arbitrary large values.
+FALLBACK_SEEDS = (0, 1, 7, 42, 123, 999, 2024, 9999)
+
+
+def seeded_property(max_examples: int = 25, seeds=FALLBACK_SEEDS):
+    """Decorator for property tests driven by a single ``seed: int`` arg.
+
+    With hypothesis: ``@settings(max_examples=...)@given(integers())``.
+    Without: ``@pytest.mark.parametrize("seed", seeds)``.
+    """
+
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(seed=st.integers(0, 10_000))(fn))
+        return pytest.mark.parametrize("seed", list(seeds))(fn)
+
+    return deco

@@ -1,12 +1,11 @@
-"""CTT + SGB planner tests (unit + hypothesis properties)."""
+"""CTT + SGB planner tests (unit + seeded properties; see proptest.py)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import seeded_property
 
 from repro.core.ctt import CallbackTrieTree
 from repro.core.sgb import (build_semantic_graphs, execute_plan, plan_ctt,
                             plan_ctt_dp, plan_naive)
-from repro.hetero import make_dataset
 
 
 def test_fig6_example():
@@ -31,38 +30,37 @@ def test_insert_and_contains():
     assert ctt.nbytes() < 5 * 1024  # fits the paper's 5 KB CTT buffer
 
 
-@st.composite
-def _metapath_workload(draw):
+def _metapath_workload(rng):
     """Random relation alphabet + valid random metapaths over it."""
-    types = draw(st.sampled_from(["AB", "ABC", "ABCD"]))
+    types = ["AB", "ABC", "ABCD"][int(rng.integers(0, 3))]
     rels = set()
     for a in types:
         for b in types:
-            if a != b and draw(st.booleans()):
+            if a != b and rng.random() < 0.5:
                 rels.add(a + b)
     # ensure a connected cycle exists so long paths are possible
     for i in range(len(types)):
         rels.add(types[i] + types[(i + 1) % len(types)])
         rels.add(types[(i + 1) % len(types)] + types[i])
-    n_targets = draw(st.integers(1, 6))
+    n_targets = int(rng.integers(1, 7))
     targets = []
     for _ in range(n_targets):
-        length = draw(st.integers(2, 7))
-        path = draw(st.sampled_from(sorted(rels)))
+        length = int(rng.integers(2, 8))
+        pool = sorted(rels)
+        path = pool[int(rng.integers(0, len(pool)))]
         while len(path) < length:
-            nxt = [r for r in rels if r[0] == path[-1]]
+            nxt = sorted(r for r in rels if r[0] == path[-1])
             if not nxt:
                 break
-            path += draw(st.sampled_from(sorted(nxt)))[1]
+            path += nxt[int(rng.integers(0, len(nxt)))][1]
         targets.append(path)
     return sorted(rels), targets
 
 
-@settings(max_examples=30, deadline=None)
-@given(_metapath_workload())
-def test_decompose_reconstructs(workload):
+@seeded_property(max_examples=30)
+def test_decompose_reconstructs(seed):
     """Segments overlap by one vertex type and respell the metapath."""
-    rels, targets = workload
+    rels, targets = _metapath_workload(np.random.default_rng(seed))
     ctt = CallbackTrieTree(rels)
     for t in targets:
         segs = ctt.decompose(t)
@@ -79,8 +77,8 @@ def test_decompose_reconstructs(workload):
         assert ctt.decompose(t) == [t]
 
 
-def test_ctt_cost_never_worse_than_naive():
-    g = make_dataset("ACM", scale=0.3)
+def test_ctt_cost_never_worse_than_naive(acm_mid):
+    g = acm_mid
     targets = [m for m in g.enumerate_metapaths(4) if len(m) >= 3][:20]
     rn = execute_plan(g, plan_naive(g, targets))
     rc = execute_plan(g, plan_ctt(g, targets))
@@ -100,9 +98,9 @@ def test_ctt_cost_never_worse_than_naive():
             assert np.array_equal(rn.graphs[t].dst, other.graphs[t].dst)
 
 
-def test_reduction_grows_with_metapath_length():
+def test_reduction_grows_with_metapath_length(acm_small):
     """Fig. 14/15 qualitatively: longer metapaths -> bigger CTT wins."""
-    g = make_dataset("ACM", scale=0.15)
+    g = acm_small
     ratios = []
     for hops in (3, 5):
         targets = [m for m in g.enumerate_metapaths(hops) if len(m) == hops + 1][:10]
@@ -114,8 +112,8 @@ def test_reduction_grows_with_metapath_length():
     assert len(ratios) == 2 and ratios[1] >= ratios[0] >= 1.0
 
 
-def test_build_semantic_graphs_planners():
-    g = make_dataset("IMDB", scale=0.2)
+def test_build_semantic_graphs_planners(imdb_small):
+    g = imdb_small
     targets = ["MAM", "AMA", "MKM"]
     for planner in ("naive", "ctt", "ctt_cache", "ctt_dp"):
         res = build_semantic_graphs(g, targets, planner=planner)

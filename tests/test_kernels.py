@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import seeded_property
 
 from repro.kernels import ops, ref
 from repro.kernels.edge_softmax import block_logits, edge_softmax_stats
@@ -27,7 +27,8 @@ def _edges(ns, nd, ne, sort=True):
 
 # ------------------------------------------------------------- seg_sum ----
 @pytest.mark.parametrize("ns,nd,ne,d", [
-    (64, 64, 200, 32), (300, 200, 1500, 64), (1000, 700, 4000, 128),
+    (64, 64, 200, 32), (300, 200, 1500, 64),
+    pytest.param(1000, 700, 4000, 128, marks=pytest.mark.slow),
     (17, 5, 40, 16),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -43,8 +44,7 @@ def test_seg_sum_sweep(ns, nd, ne, d, dtype):
                                np.asarray(want, np.float32), atol=tol, rtol=tol)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 10_000))
+@seeded_property(max_examples=15)
 def test_seg_sum_property(seed):
     rng = np.random.default_rng(seed)
     ns, nd = int(rng.integers(2, 200)), int(rng.integers(2, 150))
@@ -112,7 +112,8 @@ def test_attention_chunked_matches_ref():
 
 # ----------------------------------------------------------------- ssd ----
 @pytest.mark.parametrize("b,s,h,g,p,n,chunk", [
-    (2, 128, 4, 2, 32, 16, 32), (1, 256, 2, 1, 64, 64, 64),
+    pytest.param(2, 128, 4, 2, 32, 16, 32, marks=pytest.mark.slow),
+    pytest.param(1, 256, 2, 1, 64, 64, 64, marks=pytest.mark.slow),
     (1, 64, 8, 8, 16, 16, 16),
 ])
 def test_ssd_sweep(b, s, h, g, p, n, chunk):
@@ -128,12 +129,9 @@ def test_ssd_sweep(b, s, h, g, p, n, chunk):
 
 
 # -------------------------------------------------------------- spgemm ----
-def test_spgemm_vs_oracle():
-    from repro.hetero import make_dataset
-
-    g = make_dataset("ACM", scale=0.15)
-    a = g.relation("AP").dense()
-    b = g.relation("PA").dense()
+def test_spgemm_vs_oracle(acm_small):
+    a = acm_small.relation("AP").dense()
+    b = acm_small.relation("PA").dense()
     out, stats = compose_dense_blocked(a, b)
     want = np.asarray(ref.spgemm_ref(jnp.asarray(a), jnp.asarray(b)))
     assert np.array_equal(out, want)

@@ -12,7 +12,15 @@ from repro.models.lm import padded_vocab
 B, S = 2, 64
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+# Tier-1 smokes the cheapest arch; the rest (each 5-65 s of CPU compile
+# time) run in the slow tier: `pytest -m slow`.
+_FAST_SMOKE = {"smollm-135m"}
+
+
+@pytest.mark.parametrize(
+    "name",
+    [n if n in _FAST_SMOKE else pytest.param(n, marks=pytest.mark.slow)
+     for n in sorted(ARCHS)])
 def test_arch_smoke(name):
     """One forward + one train-grad + (non-encoder) two decode steps on a
     reduced config of the same family; shapes checked, NaN-free."""
@@ -49,8 +57,12 @@ def test_arch_smoke(name):
         assert lg.shape == (B, 1, vp) and not jnp.isnan(lg).any()
 
 
-@pytest.mark.parametrize("name", ["smollm-135m", "minicpm3-4b", "mamba2-370m",
-                                  "gemma2-2b"])
+@pytest.mark.parametrize(
+    "name",
+    ["smollm-135m",
+     pytest.param("minicpm3-4b", marks=pytest.mark.slow),
+     pytest.param("mamba2-370m", marks=pytest.mark.slow),
+     pytest.param("gemma2-2b", marks=pytest.mark.slow)])
 def test_decode_matches_full_forward(name):
     """Token-by-token decode with cache == full causal forward."""
     cfg = reduced(ARCHS[name])

@@ -1,0 +1,153 @@
+"""FrontendPipeline tests: device/host SGB parity, cache determinism,
+shared restructure products, cache-aware planning."""
+import numpy as np
+import pytest
+
+from repro.core.sgb import build_semantic_graphs, execute_plan, make_plan
+from repro.pipeline import (FrontendPipeline, PipelineConfig,
+                            SemanticGraphCache)
+
+ACM_TARGETS = ["APA", "PAP", "PSP"]
+IMDB_TARGETS = ["MAM", "AMA", "MKM"]
+
+
+def _assert_edge_identical(a, b, label):
+    assert np.array_equal(a.src, b.src), label
+    assert np.array_equal(a.dst, b.dst), label
+
+
+# ------------------------------------------------- device backend parity --
+@pytest.mark.parametrize("planner", ["naive", "ctt", "ctt_dp"])
+def test_device_backend_matches_oracle_acm(acm_small, planner):
+    """The spgemm_bsr-lowered executor is edge-identical and MAC-identical
+    to the numpy sorted-merge oracle for every planner."""
+    host = build_semantic_graphs(acm_small, ACM_TARGETS, planner=planner)
+    dev = build_semantic_graphs(acm_small, ACM_TARGETS, planner=planner,
+                                backend="device",
+                                kernel_backend="interpret")
+    assert dev.backend == "device" and dev.device_stats is not None
+    assert dev.cost.macs == host.cost.macs
+    for t in ACM_TARGETS:
+        _assert_edge_identical(host.graphs[t], dev.graphs[t],
+                               (planner, t))
+
+
+@pytest.mark.parametrize("planner", ["naive", "ctt", "ctt_dp"])
+def test_device_backend_matches_oracle_imdb(imdb_small, planner):
+    host = build_semantic_graphs(imdb_small, IMDB_TARGETS, planner=planner)
+    dev = build_semantic_graphs(imdb_small, IMDB_TARGETS, planner=planner,
+                                backend="device", kernel_backend="jnp")
+    assert dev.cost.macs == host.cost.macs
+    for t in IMDB_TARGETS:
+        _assert_edge_identical(host.graphs[t], dev.graphs[t],
+                               (planner, t))
+
+
+def test_device_per_step_costs_match_host(acm_small):
+    plan = make_plan(acm_small, ACM_TARGETS, planner="ctt")
+    host = execute_plan(acm_small, plan)
+    dev = execute_plan(acm_small, plan, backend="device",
+                       kernel_backend="jnp")
+    for (st_h, c_h), (st_d, c_d) in zip(host.per_step, dev.per_step):
+        assert st_h == st_d
+        assert c_h.macs == c_d.macs
+
+
+# ----------------------------------------------------- cache determinism --
+def test_cached_results_bitwise_equal_to_cold(acm_small):
+    pipe = FrontendPipeline(
+        PipelineConfig(planner="ctt", backend="host", pack=True),
+        cache=SemanticGraphCache())
+    cold = pipe.run(acm_small, ACM_TARGETS)
+    warm = pipe.run(acm_small, ACM_TARGETS)
+    assert cold.sgb is not None and warm.sgb is None
+    assert warm.cache_stats.misses == 0 and warm.cache_stats.hits > 0
+    for t in ACM_TARGETS:
+        _assert_edge_identical(cold.semantic[t], warm.semantic[t], t)
+        sc, dc = cold.restructured[t].scheduled_edges(renumbered=True)
+        sw, dw = warm.restructured[t].scheduled_edges(renumbered=True)
+        assert np.array_equal(sc, sw) and np.array_equal(dc, dw)
+        pc, pw = cold.packed[t], warm.packed[t]
+        assert np.array_equal(pc.src_local, pw.src_local)
+        assert np.array_equal(pc.dst_local, pw.dst_local)
+        assert np.array_equal(pc.band, pw.band)
+    # device-ready batches are identical streams too
+    for bc, bw in zip(cold.batches(), warm.batches()):
+        assert bc.metapath == bw.metapath
+        assert np.array_equal(np.asarray(bc.src), np.asarray(bw.src))
+        assert np.array_equal(np.asarray(bc.dst), np.asarray(bw.dst))
+
+
+def test_cache_shared_across_backends(acm_small):
+    """Host-built semantic graphs serve a later device-configured request
+    (products are backend-independent)."""
+    cache = SemanticGraphCache()
+    host = FrontendPipeline(
+        PipelineConfig(planner="ctt", backend="host"), cache=cache)
+    dev = FrontendPipeline(
+        PipelineConfig(planner="ctt", backend="device",
+                       kernel_backend="interpret"), cache=cache)
+    r1 = host.run(acm_small, ACM_TARGETS)
+    r2 = dev.run(acm_small, ACM_TARGETS)
+    assert r2.sgb is None  # fully cache-served: the kernel never ran
+    for t in ACM_TARGETS:
+        _assert_edge_identical(r1.semantic[t], r2.semantic[t], t)
+
+
+def test_cache_aware_planning_reuses_segments(acm_small):
+    """A new target over a warm cache composes from cached semantic graphs
+    instead of starting at one-hop relations."""
+    pipe = FrontendPipeline(
+        PipelineConfig(planner="ctt", backend="host"),
+        cache=SemanticGraphCache())
+    pipe.run(acm_small, ["APA"])
+    res = pipe.run(acm_small, ["APAPA"])
+    assert res.sgb is not None
+    assert len(res.sgb.per_step) == 1  # APA ∘ APA, not three cold joins
+    step = res.sgb.per_step[0][0]
+    assert step.left == "APA" and step.right == "APA"
+    # and the result matches a cold build
+    cold = build_semantic_graphs(acm_small, ["APAPA"], planner="ctt")
+    _assert_edge_identical(res.semantic["APAPA"], cold.graphs["APAPA"],
+                           "APAPA")
+
+
+def test_pipeline_batches_match_graphs_from_sgb(imdb_small):
+    """Pipeline batches are drop-in for the model packaging path."""
+    from repro.core.hgnn.models import graphs_from_sgb
+
+    pipe = FrontendPipeline(
+        PipelineConfig(planner="ctt", backend="host"),
+        cache=SemanticGraphCache())
+    res = pipe.run(imdb_small, IMDB_TARGETS)
+    direct = graphs_from_sgb(
+        imdb_small,
+        {t: res.semantic[t] for t in IMDB_TARGETS},
+        IMDB_TARGETS,
+        restructured=True,
+        restructured_graphs=res.restructured,
+    )
+    for bp, bd in zip(res.batches(), direct):
+        assert bp.metapath == bd.metapath
+        assert bp.edge_type_id == bd.edge_type_id
+        assert np.array_equal(np.asarray(bp.src), np.asarray(bd.src))
+        assert np.array_equal(np.asarray(bp.dst), np.asarray(bd.dst))
+
+
+def test_restructure_validates_and_is_shared(acm_small):
+    """One RestructuredGraph object per semantic graph, reused across
+    requests (the multi-model scenario never re-runs Alg. 1/2)."""
+    pipe = FrontendPipeline(
+        PipelineConfig(planner="ctt", backend="host"),
+        cache=SemanticGraphCache())
+    r1 = pipe.run(acm_small, ACM_TARGETS)
+    r2 = pipe.run(acm_small, ACM_TARGETS)
+    for t in ACM_TARGETS:
+        assert r1.restructured[t] is r2.restructured[t]
+        r1.restructured[t].validate()
+
+
+def test_invalid_metapath_rejected(acm_small):
+    pipe = FrontendPipeline(cache=SemanticGraphCache())
+    with pytest.raises(ValueError):
+        pipe.run(acm_small, ["APX"])

@@ -1,8 +1,11 @@
-"""Graph Restructurer tests: Alg. 1/2 invariants + NA equivalence."""
-import networkx as nx
+"""Graph Restructurer tests: Alg. 1/2 invariants + NA equivalence.
+
+Property tests run under hypothesis when installed, else over a fixed
+seed grid (see proptest.py) — the §4.3.1 invariants are exercised either
+way."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import seeded_property
 
 from repro.core.buffersim import na_edge_stream_original, simulate_na
 from repro.core.restructure import (decouple, recouple, restructure,
@@ -17,10 +20,10 @@ def _random_relation(rng, ns, nd, ne):
     return Relation.from_edges("A", "B", int(ns), int(nd), src, dst)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 10_000))
+@seeded_property()
 def test_matching_is_maximum(seed):
     """Alg. 1 finds a MAXIMUM matching (vs networkx Hopcroft-Karp)."""
+    nx = pytest.importorskip("networkx")
     rng = np.random.default_rng(seed)
     ns, nd = int(rng.integers(3, 40)), int(rng.integers(3, 40))
     ne = int(rng.integers(5, 200))
@@ -40,8 +43,7 @@ def test_matching_is_maximum(seed):
     assert int((ms >= 0).sum()) == len(ref) // 2
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 10_000))
+@seeded_property()
 def test_backbone_and_partition_invariants(seed):
     """§4.3.1: cover, exact 3-way partition, no out-out edges, König size."""
     rng = np.random.default_rng(seed)
@@ -63,6 +65,35 @@ def test_backbone_and_partition_invariants(seed):
             assert bb.src_in[gs].all() and not bb.dst_in[gd].any()
         else:
             assert not bb.src_in[gs].any() and bb.dst_in[gd].all()
+
+
+@seeded_property()
+def test_restructure_core_invariants(seed):
+    """The three §4.3.1 guarantees the pipeline relies on: the backbone
+    touches every edge, no Src_out->Dst_out edge exists in any scheduled
+    subgraph, and the layout renumbering is a bijection per side."""
+    rng = np.random.default_rng(seed)
+    rel = _random_relation(rng, int(rng.integers(2, 60)),
+                           int(rng.integers(2, 60)),
+                           int(rng.integers(1, 300)))
+    rg = restructure(rel)
+    bb = rg.backbone
+    # backbone touches every edge
+    assert bool((bb.src_in[rel.src] | bb.dst_in[rel.dst]).all())
+    # no Src_out -> Dst_out edge in the scheduled stream
+    s, d = rg.scheduled_edges()
+    assert s.shape[0] == rel.num_edges
+    assert not ((~bb.src_in[s]) & (~bb.dst_in[d])).any()
+    # renumbering is a bijection on each side (a permutation of ids)
+    sp, dp = rg.permutations()
+    assert np.array_equal(np.sort(sp), np.arange(rel.num_src))
+    assert np.array_equal(np.sort(dp), np.arange(rel.num_dst))
+    # the renumbered stream stays in-range and edge-count-preserving
+    s2, d2 = rg.scheduled_edges(renumbered=True)
+    assert s2.shape[0] == rel.num_edges
+    assert s2.min(initial=0) >= 0 and d2.min(initial=0) >= 0
+    assert s2.max(initial=-1) < rel.num_src
+    assert d2.max(initial=-1) < rel.num_dst
 
 
 def test_scheduled_edges_multiset_equal():

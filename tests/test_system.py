@@ -3,20 +3,30 @@ GFP pipeline, and the combined frontend win counters."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.buffersim import na_edge_stream_original, simulate_na
 from repro.core.hgnn import HGNN, HGNNConfig
 from repro.core.hgnn.models import graphs_from_sgb
 from repro.core.restructure import restructure
 from repro.core.sgb import build_semantic_graphs, execute_plan, plan_ctt, plan_naive
-from repro.hetero import make_dataset
 
 
-def test_full_pipeline_all_models():
-    """HetG -> CTT-planned SGB -> Graph Restructurer -> RGCN/RGAT/S-HGN."""
-    g = make_dataset("ACM", scale=0.25)
+def test_full_pipeline_all_models(acm_small):
+    """HetG -> FrontendPipeline (SGB + Restructurer) -> RGCN/RGAT/S-HGN.
+
+    The pipeline's shared batches (multi-model scenario: one frontend
+    pass, three models) must agree with the original-layout path to
+    floating-point reassociation."""
+    from repro.pipeline import (FrontendPipeline, PipelineConfig,
+                                SemanticGraphCache)
+
+    g = acm_small
     targets = ["APA", "PAP", "PSP"]
     res = build_semantic_graphs(g, targets, planner="ctt")
+    pipe = FrontendPipeline(PipelineConfig(planner="ctt"),
+                            cache=SemanticGraphCache())
+    shared = pipe.run(g, targets).batches()  # built once, used by all 3
     feats = {t: jnp.asarray(x) for t, x in g.features.items()}
     for model in ("rgcn", "rgat", "shgn"):
         cfg = HGNNConfig(model=model, hidden=32, num_layers=2,
@@ -24,15 +34,15 @@ def test_full_pipeline_all_models():
         m = HGNN(cfg, g.feature_dims, g.num_vertices, sorted(targets))
         params = m.init(jax.random.key(0))
         logits_o = m.apply(params, feats, graphs_from_sgb(g, res.graphs, targets))
-        logits_r = m.apply(params, feats,
-                           graphs_from_sgb(g, res.graphs, targets, restructured=True))
+        logits_r = m.apply(params, feats, shared)
         assert logits_o.shape == (g.num_vertices["P"], 3)
         assert not jnp.isnan(logits_o).any()
         np.testing.assert_allclose(logits_o, logits_r, atol=1e-4)
 
 
-def test_hgnn_training_converges():
-    g = make_dataset("IMDB", scale=0.2)
+@pytest.mark.slow
+def test_hgnn_training_converges(imdb_small):
+    g = imdb_small
     targets = ["MAM", "MKM"]
     res = build_semantic_graphs(g, targets, planner="ctt")
     graphs = graphs_from_sgb(g, res.graphs, targets)
@@ -56,10 +66,10 @@ def test_hgnn_training_converges():
     assert float(loss_fn(params)) < l0 * 0.9
 
 
-def test_frontend_wins_compose():
+def test_frontend_wins_compose(acm_mid):
     """The two frontend techniques improve their respective stages on the
     same workload (the Fig.12 mechanism)."""
-    g = make_dataset("ACM", scale=0.3)
+    g = acm_mid
     targets = [m for m in g.enumerate_metapaths(4) if len(m) >= 4][:8]
     rn = execute_plan(g, plan_naive(g, targets))
     rc = execute_plan(g, plan_ctt(g, targets))
