@@ -155,7 +155,9 @@ def bench_dram_access() -> List[str]:
             f"fig17/dram/{ds}/{rel.name}", 0.0,
             f"lru_dram_ratio={b.dram_bytes / max(a.dram_bytes, 1):.3f};"
             f"kernel_blocks_ratio={pb.num_blocks / max(pa.num_blocks, 1):.3f};"
-            f"kernel_hbm_ratio={pb.hbm_feature_bytes(FEATURE_DIM) / max(pa.hbm_feature_bytes(FEATURE_DIM), 1):.3f}"))
+            # fp32 elem bytes (the kernel's compute dtype); the ratio is
+            # dtype-invariant but the absolute bytes are what gfp_bench logs
+            f"kernel_hbm_ratio={pb.hbm_feature_bytes(FEATURE_DIM, elem_bytes=4) / max(pa.hbm_feature_bytes(FEATURE_DIM, elem_bytes=4), 1):.3f}"))
     return out
 
 

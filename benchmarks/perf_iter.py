@@ -78,7 +78,8 @@ def cell_c():
                 "dataset": ds, "variant": name, "hit": round(st.hit_rate, 4),
                 "dram_mb": round(st.dram_bytes / 2**20, 2),
                 "kernel_blocks": pk.num_blocks,
-                "kernel_hbm_mb": round(pk.hbm_feature_bytes(64) / 2**20, 1),
+                # fp32: matches what the NA kernel actually streams
+                "kernel_hbm_mb": round(pk.hbm_feature_bytes(64, elem_bytes=4) / 2**20, 1),
             })
             print(rows[-1])
     os.makedirs("results/perf", exist_ok=True)

@@ -2,19 +2,25 @@
 from repro.core.hgnn.layers import (
     edge_softmax_weights,
     feature_projection,
-    na_mean,
     na_attention,
+    na_attention_banded,
+    na_mean,
+    na_mean_banded,
     semantic_fusion,
 )
-from repro.core.hgnn.models import HGNN, HGNNConfig, SemanticGraphBatch
+from repro.core.hgnn.models import (BandedBatch, HGNN, HGNNConfig,
+                                    SemanticGraphBatch)
 
 __all__ = [
+    "BandedBatch",
     "HGNN",
     "HGNNConfig",
     "SemanticGraphBatch",
     "edge_softmax_weights",
     "feature_projection",
-    "na_mean",
     "na_attention",
+    "na_attention_banded",
+    "na_mean",
+    "na_mean_banded",
     "semantic_fusion",
 ]

@@ -1,12 +1,21 @@
 """GFP sub-stage primitives: Feature Projection, Neighbor Aggregation,
-Semantic Fusion — pure JAX, layout-agnostic.
+Semantic Fusion.
 
-All NA primitives take global (src, dst) edge index arrays.  The Graph
-Restructurer only *reorders* those arrays (and renumbers the feature rows);
-the math is unchanged, so original and restructured layouts agree to
-floating-point reassociation.  Per-destination softmax uses segment
-max/sum over global dst ids and therefore stays exact across the three
-subgraphs even though a backbone destination's edges span two of them.
+Two NA families live here:
+
+  * the pure-jnp primitives (``na_mean`` / ``na_attention``) take global
+    (src, dst) edge index arrays and run ``jax.ops.segment_*`` — the
+    layout-agnostic oracle path.  The Graph Restructurer only *reorders*
+    those arrays; the math is unchanged, so original and restructured
+    layouts agree to floating-point reassociation.  Per-destination
+    softmax uses segment max/sum over global dst ids and therefore stays
+    exact across the three subgraphs even though a backbone destination's
+    edges span two of them.
+  * the banded primitives (``na_mean_banded`` / ``na_attention_banded``)
+    consume the restructurer's cached ``PackedEdges`` blocks and run the
+    Pallas NA kernels (kernels/seg_sum.py, kernels/edge_softmax.py) over
+    features permuted into the renumbered banded layout — the executed
+    form of the paper's GFP stage.
 """
 from __future__ import annotations
 
@@ -14,6 +23,9 @@ from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.ops import na_attention_packed
+from repro.kernels.seg_sum import PackedEdges, seg_sum_na
 
 
 def feature_projection(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
@@ -68,6 +80,46 @@ def na_attention(
     alpha = edge_softmax_weights(logits, dst, num_dst)
     weighted = h_src[src] * alpha[:, None]
     return jax.ops.segment_sum(weighted, dst, num_segments=num_dst)
+
+
+def na_mean_banded(
+    packed: PackedEdges,
+    h_src: jax.Array,  # (N_src, D) features in the packing's banded numbering
+    deg: jax.Array,  # (N_dst,) in-degrees in the packing's dst numbering
+    backend: str = "interpret",
+) -> jax.Array:
+    """RGCN-style NA on the banded Pallas kernel (dst rows banded too)."""
+    summed = seg_sum_na(packed, h_src, interpret=backend != "pallas")
+    return summed / jnp.maximum(deg, 1.0)[:, None]
+
+
+def na_attention_banded(
+    h_src: jax.Array,  # (N_src, D) banded-numbered source features
+    h_dst: jax.Array,  # (N_dst, D) banded-numbered destination features
+    src: jax.Array,  # (E,) banded src ids, scheduled order
+    dst: jax.Array,  # (E,) banded dst ids, scheduled order
+    packed: PackedEdges,
+    a_src: jax.Array,
+    a_dst: jax.Array,
+    edge_bias: Optional[jax.Array] = None,
+    leaky_slope: float = 0.2,
+    backend: str = "interpret",
+) -> jax.Array:
+    """GAT-style NA on the fused device-resident kernel path.
+
+    Same math as ``na_attention``; logits are computed per edge of the
+    *scheduled* stream and everything downstream (blocked scatter, online
+    (m, s) stats, alpha-weighted aggregation) stays on device via
+    ``kernels.ops.na_attention_packed``.
+    """
+    e_s = h_src @ a_src
+    e_d = h_dst @ a_dst
+    logits = e_s[src] + e_d[dst]
+    if edge_bias is not None:
+        logits = logits + edge_bias
+    logits = jax.nn.leaky_relu(logits, leaky_slope)
+    out, _ = na_attention_packed(packed, logits, h_src, dst, backend=backend)
+    return out
 
 
 def semantic_fusion(

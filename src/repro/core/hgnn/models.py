@@ -23,10 +23,13 @@ import numpy as np
 from repro.core.hgnn.layers import (
     feature_projection,
     na_attention,
+    na_attention_banded,
     na_mean,
+    na_mean_banded,
     semantic_fusion,
 )
 from repro.hetero.graph import HetGraph, Relation
+from repro.kernels.seg_sum import PackedEdges
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +77,60 @@ class SemanticGraphBatch:
             src=jnp.asarray(src, jnp.int32),
             dst=jnp.asarray(dst, jnp.int32),
             edge_type_id=edge_type_id,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BandedBatch:
+    """Device-ready semantic graph in the restructured BANDED layout.
+
+    The sibling of ``SemanticGraphBatch`` consumed by
+    ``HGNN.apply(..., na_backend="banded")``: it carries the pipeline's
+    cached ``PackedEdges`` blocks (built once per semantic graph, shared
+    across models and layers) plus the gather/scatter permutations that
+    move per-layer features into the renumbered banded numbering and NA
+    outputs back to global vertex order.  FP and SF stay in global
+    numbering; only the NA hot loop runs banded.
+    """
+
+    metapath: str
+    src_type: str
+    dst_type: str
+    num_src: int
+    num_dst: int
+    edge_type_id: int
+    packed: PackedEdges  # renumbered banded blocks (host-built, cached)
+    src_gather: jax.Array  # (num_src,) banded row -> global src id
+    dst_gather: jax.Array  # (num_dst,) banded row -> global dst id
+    dst_scatter: jax.Array  # (num_dst,) global dst -> banded row
+    src_banded: jax.Array  # (E,) banded src ids, scheduled order
+    dst_banded: jax.Array  # (E,) banded dst ids, scheduled order
+    deg: jax.Array  # (num_dst,) in-degree per banded dst row (float32)
+
+    @staticmethod
+    def from_restructured(metapath: str, rg, packed: PackedEdges,
+                          edge_type_id: int) -> "BandedBatch":
+        """Build from a ``RestructuredGraph`` + its cached renumbered
+        packing (``rg.packed(renumbered=True)``) — the two must come from
+        the same layout knobs, which the pipeline cache guarantees."""
+        rel = rg.original
+        sperm, dperm = rg.permutations()  # global -> banded
+        s, d = rg.scheduled_edges(renumbered=True)
+        deg = np.bincount(d, minlength=rel.num_dst).astype(np.float32)
+        return BandedBatch(
+            metapath=metapath,
+            src_type=metapath[0],
+            dst_type=metapath[-1],
+            num_src=rel.num_src,
+            num_dst=rel.num_dst,
+            edge_type_id=edge_type_id,
+            packed=packed,
+            src_gather=jnp.asarray(np.argsort(sperm), jnp.int32),
+            dst_gather=jnp.asarray(np.argsort(dperm), jnp.int32),
+            dst_scatter=jnp.asarray(dperm, jnp.int32),
+            src_banded=jnp.asarray(s, jnp.int32),
+            dst_banded=jnp.asarray(d, jnp.int32),
+            deg=jnp.asarray(deg),
         )
 
 
@@ -168,9 +225,37 @@ class HGNN:
         params: Dict,
         features: Dict[str, jax.Array],
         graphs: List[SemanticGraphBatch],
+        na_backend: str = "jnp",
+        kernel_backend: str = "interpret",
     ) -> jax.Array:
-        """Full GFP stage; returns logits for ``cfg.target_type`` vertices."""
+        """Full GFP stage; returns logits for ``cfg.target_type`` vertices.
+
+        ``na_backend`` selects the NA executor:
+          * "jnp"    — ``jax.ops.segment_*`` over global edge lists
+                       (``graphs`` must be ``SemanticGraphBatch``);
+          * "banded" — the Pallas NA kernels over the restructurer's cached
+                       ``PackedEdges`` blocks (``graphs`` must be
+                       ``BandedBatch``, see
+                       ``FrontendResult.banded_batches()``); features are
+                       permuted once per layer into the renumbered banded
+                       layout and NA outputs permuted back, so FP/SF and
+                       the returned logits keep global vertex numbering.
+        ``kernel_backend`` ("interpret" | "pallas") only applies to the
+        banded path.
+        """
         cfg = self.cfg
+        if na_backend not in ("jnp", "banded"):
+            raise ValueError(f"unknown na_backend {na_backend!r}")
+        if kernel_backend not in ("interpret", "pallas"):
+            raise ValueError(f"unknown kernel_backend {kernel_backend!r} "
+                             "(the banded path runs kernels only)")
+        banded = na_backend == "banded"
+        for g in graphs:
+            if banded != isinstance(g, BandedBatch):
+                raise TypeError(
+                    f"na_backend={na_backend!r} needs "
+                    f"{'BandedBatch' if banded else 'SemanticGraphBatch'} "
+                    f"inputs, got {type(g).__name__} for {g.metapath!r}")
         h: Dict[str, jax.Array] = {}
         for t, n in self.num_vertices.items():
             if self.feature_dims.get(t, 0) > 0:
@@ -189,13 +274,26 @@ class HGNN:
             for g in graphs:
                 na_p = lp["na"][g.metapath]
                 h_src = hp[g.src_type] @ na_p["w_rel"]
-                if cfg.model == "rgcn":
+                edge_bias = None
+                if cfg.model == "shgn":
+                    eb = lp["edge_emb"][g.edge_type_id] @ lp["a_edge"]
+                    edge_bias = eb  # scalar broadcast over edges
+                if banded:
+                    hb = h_src[g.src_gather]
+                    if cfg.model == "rgcn":
+                        zb = na_mean_banded(g.packed, hb, g.deg,
+                                            backend=kernel_backend)
+                    else:
+                        zb = na_attention_banded(
+                            hb, hp[g.dst_type][g.dst_gather],
+                            g.src_banded, g.dst_banded, g.packed,
+                            na_p["a_src"], na_p["a_dst"],
+                            edge_bias=edge_bias, backend=kernel_backend,
+                        )
+                    z = zb[g.dst_scatter]  # banded -> global dst order
+                elif cfg.model == "rgcn":
                     z = na_mean(h_src, g.src, g.dst, g.num_dst)
                 else:
-                    edge_bias = None
-                    if cfg.model == "shgn":
-                        eb = lp["edge_emb"][g.edge_type_id] @ lp["a_edge"]
-                        edge_bias = eb  # scalar broadcast over edges
                     z = na_attention(
                         h_src, hp[g.dst_type], g.src, g.dst, g.num_dst,
                         na_p["a_src"], na_p["a_dst"], edge_bias=edge_bias,
@@ -217,8 +315,11 @@ class HGNN:
         return h[cfg.target_type] @ head["w"] + head["b"]
 
     def loss(self, params, features, graphs, labels: jax.Array,
-             mask: Optional[jax.Array] = None) -> jax.Array:
-        logits = self.apply(params, features, graphs)
+             mask: Optional[jax.Array] = None, na_backend: str = "jnp",
+             kernel_backend: str = "interpret") -> jax.Array:
+        logits = self.apply(params, features, graphs,
+                            na_backend=na_backend,
+                            kernel_backend=kernel_backend)
         logp = jax.nn.log_softmax(logits)
         nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
         if mask is not None:
@@ -279,3 +380,10 @@ def graphs_from_pipeline(result) -> List[SemanticGraphBatch]:
     """Batches from a ``pipeline.FrontendResult`` — built once on the
     result and shared by every model (multi-model scenario)."""
     return result.batches()
+
+
+def banded_graphs_from_pipeline(result) -> List[BandedBatch]:
+    """Banded batches from a ``pipeline.FrontendResult`` for
+    ``HGNN.apply(..., na_backend="banded")`` — one ``PackedEdges`` per
+    semantic graph, shared by every model and layer."""
+    return result.banded_batches()

@@ -182,6 +182,22 @@ class Subgraph:
         return int(self.dst_ids.shape[0])
 
 
+def _first_appearance_perm(id_lists: List[np.ndarray], n: int) -> np.ndarray:
+    """new id of each global vertex = rank of its first appearance across
+    the concatenated id lists; vertices never appearing go to the tail."""
+    perm = np.full(n, -1, np.int64)
+    cat = (np.concatenate(id_lists) if id_lists else np.empty(0, np.int64))
+    touched = 0
+    if cat.size:
+        uniq, first = np.unique(cat, return_index=True)
+        order = uniq[np.argsort(first)]
+        perm[order] = np.arange(order.size)
+        touched = order.size
+    rest = np.flatnonzero(perm < 0)
+    perm[rest] = np.arange(touched, touched + rest.size)
+    return perm
+
+
 @dataclasses.dataclass
 class RestructuredGraph:
     """Output of the Graph Restructurer for one semantic graph."""
@@ -191,6 +207,11 @@ class RestructuredGraph:
     subgraphs: List[Subgraph]  # scheduled order: in_in, in_out, out_in
     match_src: np.ndarray
     match_dst: np.ndarray
+    # memoized permutations() result — the banded execution path asks for
+    # the layout once per batch build and the object is shared through the
+    # pipeline cache, so recomputing per model would be pure waste
+    _perms: Optional[Tuple[np.ndarray, np.ndarray]] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def scheduled_edges(self, renumbered: bool = False
                         ) -> Tuple[np.ndarray, np.ndarray]:
@@ -217,23 +238,17 @@ class RestructuredGraph:
     def permutations(self) -> Tuple[np.ndarray, np.ndarray]:
         """(src_perm, dst_perm): new id of each global vertex under the
         restructured layout (first-appearance order over the scheduled
-        subgraphs; untouched vertices go to the tail)."""
-        rel = self.original
-        sperm = np.full(rel.num_src, -1, np.int64)
-        dperm = np.full(rel.num_dst, -1, np.int64)
-        sc = dc = 0
-        for sg in self.subgraphs:
-            for gid in sg.src_ids:
-                if sperm[gid] < 0:
-                    sperm[gid] = sc
-                    sc += 1
-            for gid in sg.dst_ids:
-                if dperm[gid] < 0:
-                    dperm[gid] = dc
-                    dc += 1
-        sperm[sperm < 0] = np.arange(sc, sc + int((sperm < 0).sum()))
-        dperm[dperm < 0] = np.arange(dc, dc + int((dperm < 0).sum()))
-        return sperm, dperm
+        subgraphs; untouched vertices go to the tail).  Memoized — the
+        banded executor permutes features by this layout every layer."""
+        if self._perms is None:
+            rel = self.original
+            self._perms = (
+                _first_appearance_perm(
+                    [sg.src_ids for sg in self.subgraphs], rel.num_src),
+                _first_appearance_perm(
+                    [sg.dst_ids for sg in self.subgraphs], rel.num_dst),
+            )
+        return self._perms
 
     def packed(self, renumbered: bool = True,
                weight: Optional[np.ndarray] = None):

@@ -43,7 +43,7 @@ def _stats_kernel(
         s_ref[...] = jnp.zeros_like(s_ref)
 
     logit = logit_ref[0, :]
-    dstl = dstl_ref[0, :]
+    dstl = dstl_ref[0, :].astype(jnp.int32)  # host arrays are int16
     valid = valid_ref[0, :] > 0
     scat = jax.lax.broadcasted_iota(jnp.int32, (td, eb), 0) == dstl[None, :]
     eff = scat & valid[None, :]
@@ -95,14 +95,22 @@ def _stats_call(dst_tile, first, logits, dst_local, valid,
 
 def edge_softmax_stats(
     packed: PackedEdges,
-    logits_blocked: np.ndarray,  # (nb, EB) float32, aligned with packed blocks
+    logits_blocked: jax.Array,  # (nb, EB) f32 blocked layout (np or device)
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Per-destination (m, s); rows never touched get m=-1e30, s=0."""
+    """Per-destination (m, s); rows never touched get m=-1e30, s=0.
+
+    ``logits_blocked`` may be a device array built by
+    ``PackedEdges.scatter_blocks`` — the fused attention path never brings
+    per-layer logits back to the host.  (m, s) accumulate online across
+    every block of a destination tile, including non-consecutive revisits:
+    ``first_in_tile`` means first touch ever (see kernels/seg_sum.py).
+    """
     td = packed.dst_tile_rows
     num_dst_tiles = max(1, -(-packed.num_dst // td))
-    eb = packed.src_local.shape[1]
-    valid = (np.arange(eb)[None, :] < packed.count[:, None]).astype(np.int32)
+    # count-derived validity, NOT the weights: zero-weight edges still
+    # belong to their destination's softmax
+    valid = packed.valid_mask()
     m, s = _stats_call(
         jnp.asarray(packed.dst_tile), jnp.asarray(packed.first_in_tile),
         jnp.asarray(logits_blocked, jnp.float32),
@@ -120,13 +128,14 @@ def edge_softmax_stats(
 
 def block_logits(packed: PackedEdges, edge_logits_in_order: np.ndarray) -> np.ndarray:
     """Scatter a flat (E,) logit array (in scheduled edge order) into the
-    (nb, EB) blocked layout matching ``packed`` (padding gets -1e30)."""
+    (nb, EB) blocked layout matching ``packed`` (padding gets -1e30).
+
+    Host-side variant (one fancy-indexed scatter via the edge map); the
+    device-resident path uses ``packed.scatter_blocks(logits, fill=-1e30)``.
+    """
     nb, eb = packed.src_local.shape
+    blk, slot = packed.edge_map()
+    assert edge_logits_in_order.shape[0] == blk.shape[0]
     out = np.full((nb, eb), _NEG, np.float32)
-    pos = 0
-    for k in range(nb):
-        n = int(packed.count[k])
-        out[k, :n] = edge_logits_in_order[pos : pos + n]
-        pos += n
-    assert pos == edge_logits_in_order.shape[0]
+    out[blk, slot] = np.asarray(edge_logits_in_order, np.float32)
     return out

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref as _ref
-from repro.kernels.edge_softmax import block_logits, edge_softmax_stats
+from repro.kernels.edge_softmax import edge_softmax_stats
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.seg_sum import PackedEdges, pack_edge_blocks, seg_sum_na
 from repro.kernels.spgemm_bsr import compose_dense_blocked
@@ -178,6 +178,37 @@ def na_aggregate(
     return seg_sum_na(packed, h, interpret=_interpret(backend))
 
 
+def na_attention_packed(
+    packed: PackedEdges,
+    edge_logits: jax.Array,  # (E,) logits in the packing's scheduled order
+    h: jax.Array,  # (N_src, D) features in the packing's src numbering
+    dst: jax.Array,  # (E,) dst ids (packing numbering, scheduled order)
+    backend: str = DEFAULT_BACKEND,
+) -> Tuple[jax.Array, jax.Array]:
+    """Device-resident fused attention NA over a cached packing.
+
+    Per-edge logits scatter into the blocked layout on device
+    (``PackedEdges.scatter_blocks``), the Pallas stats kernel folds them
+    into online per-destination (m, s), and the alpha-weighted aggregation
+    reuses the same blocks — no host re-packing or per-block Python loops
+    anywhere on the per-layer path.  Kernel backends only ("pallas" /
+    "interpret"); the jnp oracle needs the flat edge list and lives in
+    ``na_attention_aggregate``.
+    """
+    assert backend != "jnp", "na_attention_packed is the kernel path"
+    interp = _interpret(backend)
+    logits = jnp.asarray(edge_logits, jnp.float32)
+    lb = packed.scatter_blocks(logits, fill=-1e30)
+    m, s = edge_softmax_stats(packed, lb, interpret=interp)
+    dstj = jnp.asarray(dst)
+    alpha = jnp.exp(logits - m[dstj]) / jnp.maximum(s[dstj], 1e-9)
+    out = seg_sum_na(
+        packed, h, interpret=interp,
+        weights=packed.scatter_blocks(alpha, fill=0.0),
+    )
+    return out, alpha
+
+
 def na_attention_aggregate(
     src: np.ndarray,
     dst: np.ndarray,
@@ -185,23 +216,20 @@ def na_attention_aggregate(
     h: jax.Array,
     num_dst: int,
     backend: str = DEFAULT_BACKEND,
+    packed: Optional[PackedEdges] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Edge-softmax attention NA; returns (aggregated, alpha)."""
+    """Edge-softmax attention NA; returns (aggregated, alpha).
+
+    ``packed`` supplies a cached packing of the (src, dst) stream (parity
+    with ``na_aggregate``) — without it the stream is packed on the spot.
+    """
     if backend == "jnp":
         alpha = _ref.edge_softmax_ref(jnp.asarray(edge_logits), jnp.asarray(dst), num_dst)
         out = _ref.seg_sum_na_ref(src, dst, h, num_dst, weight=np.asarray(alpha))
         return out, alpha
-    packed = pack_edge_blocks(src, dst, int(h.shape[0]), num_dst)
-    lb = block_logits(packed, np.asarray(edge_logits, np.float32))
-    m, s = edge_softmax_stats(packed, lb, interpret=_interpret(backend))
-    alpha = jnp.exp(jnp.asarray(edge_logits) - m[jnp.asarray(dst)]) / jnp.maximum(
-        s[jnp.asarray(dst)], 1e-9
-    )
-    out = seg_sum_na(
-        packed.with_weights(np.asarray(alpha, np.float32)), h,
-        interpret=_interpret(backend),
-    )
-    return out, alpha
+    if packed is None:
+        packed = pack_edge_blocks(src, dst, int(h.shape[0]), num_dst)
+    return na_attention_packed(packed, edge_logits, h, dst, backend=backend)
 
 
 def compose_boolean(

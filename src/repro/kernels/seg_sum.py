@@ -13,18 +13,22 @@ kernel streams one (BAND, D) feature tile HBM->VMEM per block instead of
 random rows.  The host-side ``pack_edge_blocks`` materializes this banded
 block format; the number of blocks it needs (and hence feature bytes moved)
 is the direct kernel-level measurement of the paper's buffer-thrashing
-claim (benchmarks/bench_dram_access.py reports it).
+claim (``benchmarks/paper_figures.py::bench_dram_access`` reports it, and
+``benchmarks/gfp_bench.py`` measures the executed kernel path).
 
-Grid: one step per edge block, ordered by destination tile; the output tile
-is revisited by consecutive blocks and zero-initialized on first touch.
-Bands are aligned to BAND-row units so the feature BlockSpec index is just
-the band id (scalar-prefetched).
+Grid: one step per edge block in scheduled-stream order; the output tile is
+zero-initialized on the FIRST TOUCH EVER of its destination tile
+(``first_in_tile``) and accumulated on every later visit — including
+non-consecutive revisits, which the restructured schedule produces when a
+backbone destination's edges span two subgraphs.  Bands are aligned to
+BAND-row units so the feature BlockSpec index is just the band id
+(scalar-prefetched).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,37 +48,136 @@ DST_TILE = 128  # output rows per tile (TD)
 class PackedEdges:
     """Banded edge-block format consumed by the kernel (host-built)."""
 
-    src_local: np.ndarray  # (nb, EB) int32: src - band*SRC_BAND (pad: w=0)
-    dst_local: np.ndarray  # (nb, EB) int32: dst - dst_tile*DST_TILE
-    weight: np.ndarray  # (nb, EB) float32 (0 for padding)
+    src_local: np.ndarray  # (nb, EB) int: src - band*SRC_BAND (pad: w=0)
+    dst_local: np.ndarray  # (nb, EB) int: dst - dst_tile*DST_TILE
+    # (nb, EB) float32 edge weights, 0 for padding.  None = unweighted:
+    # the ones-over-valid-slots mask is materialized lazily by
+    # ``valid_weight()`` on first kernel use (packing a graph no model
+    # ends up running never pays for it) and cached on the instance, so
+    # the shared per-semantic-graph packing builds it at most once.
+    weight: Optional[np.ndarray]
     band: np.ndarray  # (nb,) int32 band unit index
     dst_tile: np.ndarray  # (nb,) int32
-    first_in_tile: np.ndarray  # (nb,) int32: 1 = first block of its dst tile
+    first_in_tile: np.ndarray  # (nb,) int32: 1 = first touch EVER of dst tile
     count: np.ndarray  # (nb,) int32 valid edges in block (rest is padding)
     num_src: int
     num_dst: int
     edge_block: int = EDGE_BLOCK
     src_band: int = SRC_BAND
     dst_tile_rows: int = DST_TILE
+    # Edge -> (block, slot) index map over the scheduled stream: edge p of
+    # the flat stream lives at [edge_block_id[p], edge_slot[p]] of the
+    # blocked arrays.  Lets per-layer weights/logits become one scatter
+    # instead of an O(num_blocks) host loop; derived lazily for instances
+    # built before the map existed (old cache entries).
+    edge_block_id: Optional[np.ndarray] = None  # (E,) int32
+    edge_slot: Optional[np.ndarray] = None  # (E,) int32
 
     @property
     def num_blocks(self) -> int:
         return int(self.band.shape[0])
 
-    def hbm_feature_bytes(self, d: int, elem_bytes: int = 2) -> int:
-        """Feature bytes streamed HBM->VMEM: one (BAND, D) tile per block."""
+    @property
+    def num_edges(self) -> int:
+        return int(self.count.sum())
+
+    def hbm_feature_bytes(self, d: int, elem_bytes: int = 4) -> int:
+        """Feature bytes streamed HBM->VMEM: one (BAND, D) tile per block.
+
+        ``elem_bytes`` defaults to 4 (fp32) — the kernel gathers and
+        accumulates in fp32; pass 2 only when the feature tiles themselves
+        are stored bf16.
+        """
         return self.num_blocks * self.src_band * d * elem_bytes
+
+    def edge_map(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(edge_block_id, edge_slot) for the flat scheduled stream."""
+        if self.edge_block_id is None or self.edge_slot is None:
+            cnt = self.count.astype(np.int64)
+            blk = np.repeat(np.arange(self.num_blocks, dtype=np.int64), cnt)
+            starts = np.concatenate(([0], np.cumsum(cnt)[:-1]))
+            slot = np.arange(int(cnt.sum()), dtype=np.int64) - np.repeat(starts, cnt)
+            self.edge_block_id = blk.astype(np.int32)
+            self.edge_slot = slot.astype(np.int32)
+        return self.edge_block_id, self.edge_slot
+
+    def valid_mask(self) -> np.ndarray:
+        """(nb, EB) float32: 1 on valid slots, 0 on padding (memoized).
+
+        Purely count-derived — NOT the edge weights: a weighted packing
+        can legitimately carry zero weights on valid slots, and validity
+        (e.g. the softmax stats mask) must still include those edges.
+        """
+        vm = getattr(self, "_valid_mask", None)
+        if vm is None:
+            eb = self.src_local.shape[1]
+            vm = (
+                np.arange(eb, dtype=np.int32)[None, :] < self.count[:, None]
+            ).astype(np.float32)
+            self._valid_mask = vm
+        return vm
+
+    def valid_weight(self) -> np.ndarray:
+        """(nb, EB) float32 weights; unweighted packs resolve to the
+        ones-over-valid-slots mask (built lazily, cached)."""
+        if self.weight is None:
+            self.weight = self.valid_mask()
+        return self.weight
 
     def with_weights(self, flat_weights: np.ndarray) -> "PackedEdges":
         """Same blocking, new per-edge weights given in scheduled order."""
-        ww = np.zeros_like(self.weight)
-        pos = 0
-        for k in range(self.num_blocks):
-            n = int(self.count[k])
-            ww[k, :n] = flat_weights[pos : pos + n]
-            pos += n
-        assert pos == flat_weights.shape[0]
-        return dataclasses.replace(self, weight=ww)
+        blk, slot = self.edge_map()
+        assert flat_weights.shape[0] == blk.shape[0]
+        nb, eb = self.src_local.shape
+        ww = np.zeros((nb, eb), np.float32)
+        ww[blk, slot] = np.asarray(flat_weights, np.float32)
+        return dataclasses.replace(
+            self, weight=ww, edge_block_id=self.edge_block_id,
+            edge_slot=self.edge_slot)
+
+    def scatter_blocks(self, flat: jax.Array, fill: float = 0.0) -> jax.Array:
+        """Device-side scatter of per-edge values (scheduled order) into the
+        (nb, EB) blocked layout; padding slots get ``fill``.
+
+        This is the device-resident sibling of ``with_weights`` /
+        ``edge_softmax.block_logits``: the index map is a static constant
+        (uploaded once per packing, cached device-side), so per-layer
+        logits/weights never round-trip through the host.
+        """
+        nb, eb = self.src_local.shape
+        out = jnp.full((nb, eb), fill, jnp.float32)
+        blk, slot = self.device_edge_map()
+        if blk.shape[0] == 0:
+            return out
+        return out.at[blk, slot].set(jnp.asarray(flat, jnp.float32))
+
+    def device_edge_map(self) -> Tuple[jax.Array, jax.Array]:
+        """Device-resident copy of ``edge_map()``, uploaded once and
+        cached on the instance (the attention path scatters twice per
+        layer per semantic graph — re-staging (E,) index constants every
+        call would be a per-layer host round-trip)."""
+        dm = getattr(self, "_device_map", None)
+        if dm is None:
+            blk, slot = self.edge_map()
+            dm = (jnp.asarray(blk), jnp.asarray(slot))
+            self._device_map = dm
+        return dm
+
+
+def _first_touch_flags(dt: np.ndarray) -> np.ndarray:
+    """1 for the first block EVER targeting each dst tile, else 0.
+
+    The flag gates the kernel's output-tile zero-init, so it must mean
+    "first touch ever": the restructured schedule revisits a tile
+    non-consecutively when a backbone destination's edges span two
+    subgraphs, and re-zeroing on revisit would discard the accumulation
+    from the earlier subgraph.
+    """
+    ft = np.zeros(dt.shape[0], np.int32)
+    if dt.shape[0]:
+        _, first_idx = np.unique(dt, return_index=True)
+        ft[first_idx] = 1
+    return ft
 
 
 def pack_edge_blocks(
@@ -93,7 +196,81 @@ def pack_edge_blocks(
     tile changes, or its sources leave the current ``src_band``-aligned
     band.  Locality-poor orderings therefore produce many more blocks —
     the packer is itself a locality meter.
+
+    Fully vectorized: run boundaries come from adjacent (dst-tile, band)
+    changes, runs are split into ``edge_block`` chunks with O(num_blocks)
+    run-length arithmetic, and the blocked arrays are built with one
+    fancy-indexed scatter per array — O(E) numpy work with no
+    Python-level edge loop (``pack_edge_blocks_reference`` keeps the seed
+    loop as the oracle).  Local indices are stored int16 (they are
+    bounded by the block geometry, 512/128) and unweighted packs defer
+    the ones-mask (``PackedEdges.weight = None``): the dense (nb, EB)
+    arrays are the packer's memory-bandwidth floor, so shrinking them is
+    most of the throughput win over the seed.
     """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    E = src.size
+    if E == 0:
+        z2 = np.zeros((0, edge_block), np.int16)
+        return PackedEdges(
+            z2, z2.copy(), np.zeros((0, edge_block), np.float32),
+            np.zeros(0, np.int32), np.zeros(0, np.int32),
+            np.zeros(0, np.int32), np.zeros(0, np.int32), num_src, num_dst,
+            edge_block=edge_block, src_band=src_band, dst_tile_rows=dst_tile,
+            edge_block_id=np.zeros(0, np.int32), edge_slot=np.zeros(0, np.int32),
+        )
+
+    dtile = dst // dst_tile
+    band = src // src_band
+    # run = maximal stretch of constant (dst tile, band); block = run chunk
+    newrun = np.empty(E, bool)
+    newrun[0] = True
+    np.logical_or(dtile[1:] != dtile[:-1], band[1:] != band[:-1], out=newrun[1:])
+    run_starts = np.flatnonzero(newrun)
+    run_len = np.diff(np.append(run_starts, E))
+    blocks_per_run = -(-run_len // edge_block)
+    nb = int(blocks_per_run.sum())
+    run_of_blk = np.repeat(np.arange(run_starts.size), blocks_per_run)
+    blk_cum = np.concatenate(([0], np.cumsum(blocks_per_run)[:-1]))
+    chunk = np.arange(nb) - blk_cum[run_of_blk]  # block index within run
+    starts = run_starts[run_of_blk] + chunk * edge_block
+    cnt = np.diff(np.append(starts, E)).astype(np.int32)
+    blk = np.repeat(np.arange(nb), cnt)  # (E,) block id per edge
+    slot = np.arange(E) - np.repeat(starts, cnt)  # (E,) slot within block
+
+    bandv = band[starts].astype(np.int32)
+    dt = dtile[starts].astype(np.int32)
+    ft = _first_touch_flags(dt)
+
+    sl = np.zeros((nb, edge_block), np.int16)
+    dl = np.zeros((nb, edge_block), np.int16)
+    sl[blk, slot] = src - band * src_band
+    dl[blk, slot] = dst - dtile * dst_tile
+    if weight is None:
+        ww = None  # lazy ones-mask (valid_weight)
+    else:
+        ww = np.zeros((nb, edge_block), np.float32)
+        ww[blk, slot] = np.asarray(weight, np.float32)
+    return PackedEdges(
+        sl, dl, ww, bandv, dt, ft, cnt, num_src, num_dst,
+        edge_block=edge_block, src_band=src_band, dst_tile_rows=dst_tile,
+        edge_block_id=blk.astype(np.int32), edge_slot=slot.astype(np.int32),
+    )
+
+
+def pack_edge_blocks_reference(
+    src: np.ndarray,
+    dst: np.ndarray,
+    num_src: int,
+    num_dst: int,
+    weight: Optional[np.ndarray] = None,
+    edge_block: int = EDGE_BLOCK,
+    src_band: int = SRC_BAND,
+    dst_tile: int = DST_TILE,
+) -> PackedEdges:
+    """The seed Python-loop packer, kept as the equivalence oracle and the
+    baseline of ``benchmarks/gfp_bench.py``'s packer-throughput meter."""
     src = np.asarray(src, np.int64)
     dst = np.asarray(dst, np.int64)
     w = np.ones(src.shape, np.float32) if weight is None else np.asarray(weight, np.float32)
@@ -120,9 +297,7 @@ def pack_edge_blocks(
     ww = np.zeros((nb, edge_block), np.float32)
     bandv = np.zeros((nb,), np.int32)
     dt = np.zeros((nb,), np.int32)
-    ft = np.zeros((nb,), np.int32)
     cnt = np.zeros((nb,), np.int32)
-    last_tile = -1
     for k, (a, b, band, tile) in enumerate(bounds):
         n = b - a
         sl[k, :n] = src[a:b] - band * src_band
@@ -130,11 +305,9 @@ def pack_edge_blocks(
         ww[k, :n] = w[a:b]
         bandv[k] = band
         dt[k] = tile
-        ft[k] = 1 if tile != last_tile else 0
         cnt[k] = n
-        last_tile = tile
     return PackedEdges(
-        sl, dl, ww, bandv, dt, ft, cnt, num_src, num_dst,
+        sl, dl, ww, bandv, dt, _first_touch_flags(dt), cnt, num_src, num_dst,
         edge_block=edge_block, src_band=src_band, dst_tile_rows=dst_tile,
     )
 
@@ -151,8 +324,8 @@ def _na_kernel(
     def _zero():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    srcl = srcl_ref[0, :]
-    dstl = dstl_ref[0, :]
+    srcl = srcl_ref[0, :].astype(jnp.int32)  # host arrays are int16
+    dstl = dstl_ref[0, :].astype(jnp.int32)
     w = w_ref[0, :]
     sel = srcl[:, None] == jax.lax.broadcasted_iota(jnp.int32, (eb, band), 1)
     gathered = sel.astype(jnp.float32) @ h_ref[...].astype(jnp.float32)
@@ -190,8 +363,19 @@ def _seg_sum_call(
     )(band, dst_tile, first, src_local, dst_local, weight, h)
 
 
-def seg_sum_na(packed: PackedEdges, h: jax.Array, interpret: bool = True) -> jax.Array:
-    """Weighted NA aggregation; returns (num_dst, D)."""
+def seg_sum_na(
+    packed: PackedEdges,
+    h: jax.Array,
+    interpret: bool = True,
+    weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Weighted NA aggregation; returns (num_dst, D).
+
+    ``weights`` optionally overrides ``packed.weight`` with an already
+    device-resident (nb, EB) blocked array (see
+    ``PackedEdges.scatter_blocks``) — the attention path feeds per-layer
+    alpha this way without re-materializing host-side blocks.
+    """
     band_units = int(packed.band.max()) + 1 if packed.num_blocks else 1
     n_src_pad = max(band_units * packed.src_band, packed.num_src)
     if h.shape[0] < n_src_pad:
@@ -199,11 +383,12 @@ def seg_sum_na(packed: PackedEdges, h: jax.Array, interpret: bool = True) -> jax
             [h, jnp.zeros((n_src_pad - h.shape[0], h.shape[1]), h.dtype)], axis=0
         )
     num_dst_tiles = max(1, -(-packed.num_dst // packed.dst_tile_rows))
+    w = jnp.asarray(packed.valid_weight()) if weights is None else jnp.asarray(weights)
     out = _seg_sum_call(
         jnp.asarray(packed.band), jnp.asarray(packed.dst_tile),
         jnp.asarray(packed.first_in_tile),
         jnp.asarray(packed.src_local), jnp.asarray(packed.dst_local),
-        jnp.asarray(packed.weight), h,
+        w, h,
         num_dst_tiles, packed.src_band, packed.dst_tile_rows, interpret,
     )
     # tiles never visited by any block hold uninitialized memory -> zero them

@@ -14,8 +14,10 @@ of the topology, so products are cached under
 
 The cache is process-wide by default (``default_cache()``); pipelines can
 carry a private instance instead.  Eviction is LRU by entry count —
-entries hold numpy arrays only (no jax buffers), so footprint scales with
-edge counts, and ``nbytes()`` reports it.
+entry payloads are numpy arrays, so footprint scales with edge counts and
+``nbytes()`` reports it (a ``PackedEdges`` that has fed the banded
+executor additionally pins its device-side edge-map copy, by design —
+that is the once-per-packing upload the executor amortizes).
 """
 from __future__ import annotations
 

@@ -12,8 +12,11 @@ calls; this module fuses them into a single cached execution engine:
      graph per layout knob; the resulting permutations are cached and
      shared by every model consuming the graph.
   3. **GFP packing** — device-ready ``SemanticGraphBatch`` lists (and
-     optionally banded ``PackedEdges`` blocks for the NA kernel) built
-     once and reused across the multi-model / multi-target scenarios.
+     banded ``PackedEdges`` blocks for the NA kernel, pre-built with
+     ``pack=True`` or on the first ``banded_batches()`` request) built
+     once and reused across the multi-model / multi-target scenarios;
+     ``FrontendResult.banded_batches()`` is what
+     ``HGNN.apply(..., na_backend="banded")`` consumes.
 
 Everything is keyed by ``HetGraph.fingerprint()`` in a
 ``SemanticGraphCache`` (process-wide by default), so a repeated request —
@@ -72,6 +75,7 @@ class FrontendResult:
     timings: Dict[str, float]  # stage wall seconds
     cache_stats: CacheStats  # hits/misses attributable to this run
     _batches: Optional[list] = dataclasses.field(default=None, repr=False)
+    _banded: Optional[list] = dataclasses.field(default=None, repr=False)
 
     @property
     def cold(self) -> bool:
@@ -92,6 +96,38 @@ class FrontendResult:
                 restructured=self.config.restructure,
                 restructured_graphs=self.restructured)
         return self._batches
+
+    def banded_batches(self) -> list:
+        """Banded ``BandedBatch`` list for the kernel-executed GFP path
+        (``HGNN.apply(..., na_backend="banded")``) — built once, shared.
+
+        Uses the run's cached renumbered ``PackedEdges`` when the config
+        packed them (``pack=True`` + ``renumbered=True``); a model
+        requesting banded batches otherwise triggers the packing on
+        demand, once per semantic graph, and the result is kept on this
+        ``FrontendResult`` for every later model.  Edge-type ids follow
+        the same ``sorted(targets)`` order as ``batches()``, so one
+        parameter pytree drives both executors.
+        """
+        if self._banded is None:
+            if not self.config.restructure:
+                raise ValueError(
+                    "banded batches need restructure=True (the banded "
+                    "layout is the restructurer's renumbered schedule)")
+            from repro.core.hgnn.models import BandedBatch
+
+            use_cached = self.config.renumbered  # packed dict layout match
+            out = []
+            for i, mp in enumerate(sorted(self.targets)):
+                rg = self.restructured[mp]
+                pk = self.packed.get(mp) if use_cached else None
+                if pk is None:
+                    pk = rg.packed(renumbered=True)
+                    if use_cached:
+                        self.packed[mp] = pk
+                out.append(BandedBatch.from_restructured(mp, rg, pk, i))
+            self._banded = out
+        return self._banded
 
 
 class FrontendPipeline:
