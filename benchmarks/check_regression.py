@@ -1,0 +1,157 @@
+"""Bench-regression gate: fail CI when a fresh bench point regresses.
+
+Compares a candidate bench JSON (the CI smoke run, e.g.
+``/tmp/BENCH_gfp_ci.json``) against committed baseline points and fails
+when any tracked metric regresses by more than ``--tolerance`` (default
+20%).  Tracked metrics are *dimensionless ratios*, so the gate is robust
+to absolute runner-speed differences between the committing machine and
+the CI runner:
+
+  gfp_bench/v1    banded-vs-jnp per-layer latency ratio per model, and
+                  restructured-vs-original HBM tile-load ratio per
+                  semantic graph (deterministic);
+  train_bench/v1  banded-vs-jnp per-epoch latency ratio per dataset.
+
+Scale adjustment: ratio metrics are only meaningful between points of
+the same ``scale`` (tiny graphs fit one source band, so e.g. the tile
+ratio is ~1.0 at smoke scale but ~0.5 at scale 1.0).  Pass every
+committed point — the root trajectory files plus the CI-scale baselines
+under ``benchmarks/baselines/`` — and the gate compares against the
+baseline whose scales match the candidate; with no scale-matching
+baseline it reports and exits 0 (the first run at a new scale seeds the
+baseline instead of failing it).
+
+Usage:
+  python benchmarks/check_regression.py --candidate /tmp/BENCH_gfp_ci.json \
+      --baseline BENCH_gfp.json \
+      --baseline benchmarks/baselines/BENCH_gfp_scale0.15.json \
+      [--tolerance 0.2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+
+def extract_metrics(point: Dict) -> Dict[str, float]:
+    """Flatten a bench point into named dimensionless ratio metrics."""
+    schema = point.get("schema", "")
+    metrics: Dict[str, float] = {}
+    if schema.startswith("gfp_bench/"):
+        for ds, entry in point.get("datasets", {}).items():
+            for model, m in entry.get("models", {}).items():
+                jnp_us = m.get("us_per_layer_jnp", 0.0)
+                if jnp_us > 0:
+                    name = f"gfp/{ds}/{model}/latency_ratio"
+                    metrics[name] = m["us_per_layer_banded"] / jnp_us
+            for mp, h in entry.get("hbm", {}).items():
+                orig = h.get("tile_loads_original", 0)
+                if orig > 0:
+                    name = f"gfp/{ds}/hbm/{mp}/tile_ratio"
+                    metrics[name] = h["tile_loads_restructured"] / orig
+    elif schema.startswith("train_bench/"):
+        for ds, entry in point.get("datasets", {}).items():
+            r = entry.get("latency_ratio_banded_vs_jnp")
+            if r:
+                metrics[f"train/{ds}/latency_ratio"] = r
+    else:
+        raise ValueError(f"unknown bench schema {schema!r}")
+    return metrics
+
+
+def _match_key(point: Dict) -> tuple:
+    """Comparability key: schema + scales + epochs + dataset set.
+
+    Epochs and the dataset set matter for train points — the committed
+    full trajectory (3 datasets, 60 epochs) and the CI smoke baseline
+    (ACM only, 8 epochs) can share a scale, and comparing across them
+    would fail spuriously on missing datasets."""
+    return (
+        point.get("schema"),
+        point.get("scale"),
+        point.get("model_scale", point.get("scale")),
+        point.get("epochs"),
+        tuple(sorted(point.get("datasets", {}))),
+    )
+
+
+def pick_baseline(baselines: List[Dict], candidate: Dict) -> Optional[Dict]:
+    """The comparable committed point, if any (scale adjustment: ratios
+    are compared like-for-like, never across scales or run shapes)."""
+    want = _match_key(candidate)
+    for b in baselines:
+        if _match_key(b) == want:
+            return b
+    return None
+
+
+def compare(baseline: Dict, candidate: Dict, tolerance: float) -> List[str]:
+    """Names + detail of every metric that regressed beyond tolerance.
+
+    Lower is better for every tracked ratio; a metric present in the
+    baseline but missing from the candidate is a failure too (a silently
+    dropped measurement must not pass the gate).
+    """
+    base = extract_metrics(baseline)
+    cand = extract_metrics(candidate)
+    failures: List[str] = []
+    for name, b in sorted(base.items()):
+        c = cand.get(name)
+        if c is None:
+            failures.append(f"{name}: missing from candidate (baseline {b:.3f})")
+            continue
+        if c > b * (1.0 + tolerance):
+            growth = (c / b - 1) * 100
+            failures.append(
+                f"{name}: {c:.3f} vs baseline {b:.3f} (+{growth:.0f}% > {tolerance * 100:.0f}%)"
+            )
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--candidate", required=True)
+    ap.add_argument(
+        "--baseline",
+        action="append",
+        required=True,
+        help="committed bench JSON (repeatable); the gate compares against the scale-matching one",
+    )
+    ap.add_argument("--tolerance", type=float, default=0.2)
+    args = ap.parse_args(argv)
+
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    baselines = []
+    for path in args.baseline:
+        with open(path) as f:
+            baselines.append(json.load(f))
+
+    chosen = pick_baseline(baselines, candidate)
+    if chosen is None:
+        key = _match_key(candidate)
+        print(
+            f"check_regression: no comparable committed baseline for {key}; "
+            f"nothing to gate (commit the candidate as the baseline to start gating)"
+        )
+        return 0
+    failures = compare(chosen, candidate, args.tolerance)
+    if failures:
+        print(
+            f"check_regression: {len(failures)} regression(s) vs the committed baseline "
+            f"(tolerance {args.tolerance * 100:.0f}%):"
+        )
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        return 1
+    n = len(extract_metrics(chosen))
+    print(
+        f"check_regression: OK — {n} metrics within {args.tolerance * 100:.0f}% of the committed baseline"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

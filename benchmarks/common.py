@@ -2,14 +2,12 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict
 
 import numpy as np
 
-from repro.core.buffersim import (GFPCycleModel, na_edge_stream_original,
-                                  simulate_na)
+from repro.core.buffersim import GFPCycleModel, simulate_na
 from repro.core.restructure import restructure
-from repro.hetero import make_dataset
 
 # HiHGNN-flavoured backend constants (Table 3): 1 GHz, 512 GB/s HBM,
 # 32x32 systolic array -> 1024 MACs/cycle.

@@ -1,10 +1,8 @@
 """Beyond-paper benchmarks: kernel microbenches + MoE dispatch locality."""
 from __future__ import annotations
 
-import time
 from typing import List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -15,7 +13,7 @@ from repro.hetero import make_dataset
 def bench_kernels() -> List[str]:
     """Interpret-mode kernel vs jnp-oracle wall time (correctness-path cost;
     TPU perf comes from the dry-run roofline, not CPU timing)."""
-    from repro.kernels import ops, ref
+    from repro.kernels import ref
     from repro.kernels.seg_sum import pack_edge_blocks, seg_sum_na
 
     rng = np.random.default_rng(0)

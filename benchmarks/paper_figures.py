@@ -5,14 +5,13 @@ carries the figure's headline quantity (speedup / reduction / rate).
 """
 from __future__ import annotations
 
-import time
 from typing import List
 
 import numpy as np
 
 from benchmarks.common import (BUFFER_BYTES, CYCLE_MODEL, FEATURE_DIM,
                                gfp_cycles, na_streams, row, timed)
-from repro.core.buffersim import na_edge_stream_original, simulate_na
+from repro.core.buffersim import simulate_na
 from repro.core.sgb import execute_plan, plan_ctt, plan_ctt_dp, plan_naive
 from repro.hetero import make_dataset
 

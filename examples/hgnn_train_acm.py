@@ -1,55 +1,57 @@
-"""End-to-end driver: train an HGNN (RGAT) on synthetic ACM for a few
-hundred steps with the CTT-planned SGB + Graph Restructurer frontend.
+"""End-to-end driver: train an HGNN on synthetic ACM with the cached
+frontend pipeline and the jitted semi-supervised train step — on either
+NA executor (the banded path runs the Pallas NA kernels forward and
+their custom VJPs backward over one cached packing).
 
-  PYTHONPATH=src python examples/hgnn_train_acm.py [--steps 200]
+  PYTHONPATH=src python examples/hgnn_train_acm.py [--steps 100]
+      [--model rgat] [--na-backend jnp|banded] [--scale 1.0]
+
+Note: the banded executor uses interpret-mode kernels on CPU — keep
+--scale <= 0.25 with it unless you enjoy watching jaxprs unroll.
 """
 import argparse
 import time
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.hgnn import HGNN, HGNNConfig
-from repro.core.hgnn.models import graphs_from_sgb
-from repro.core.sgb import build_semantic_graphs
 from repro.hetero import make_dataset
-from repro.train.optim import adamw_init, adamw_update, warmup_cosine
+from repro.pipeline import FrontendPipeline, PipelineConfig
+from repro.train import fit, propagated_feature_labels, semi_supervised_masks
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--steps", type=int, default=100)
 ap.add_argument("--model", default="rgat", choices=["rgcn", "rgat", "shgn"])
+ap.add_argument("--na-backend", default="jnp", choices=["jnp", "banded"])
+ap.add_argument("--scale", type=float, default=1.0)
 args = ap.parse_args()
 
-g = make_dataset("ACM")
+g = make_dataset("ACM", scale=args.scale)
 targets = ["APA", "PAP", "PSP", "PTP"]
-res = build_semantic_graphs(g, targets, planner="ctt")
-graphs = graphs_from_sgb(g, res.graphs, targets, restructured=True)
+pipe = FrontendPipeline(PipelineConfig(planner="ctt", backend="host",
+                                       pack=args.na_backend == "banded"))
+res = pipe.run(g, targets)
+graphs = res.batches() if args.na_backend == "jnp" else res.banded_batches()
 feats = {t: jnp.asarray(x) for t, x in g.features.items()}
+
+n = g.num_vertices["P"]
+labels = propagated_feature_labels(res.semantic, targets, g.features, n)
+masks = semi_supervised_masks(n, seed=0)
 
 cfg = HGNNConfig(model=args.model, hidden=64, num_layers=3, num_classes=3,
                  target_type="P")
 model = HGNN(cfg, g.feature_dims, g.num_vertices, sorted(targets))
-params = model.init(jax.random.key(0))
-# synthetic labels correlated with topology (degree buckets) so the task
-# is learnable
-deg = np.zeros(g.num_vertices["P"])
-for t in targets:
-    deg += np.bincount(res.graphs[t].dst, minlength=g.num_vertices["P"])
-labels = jnp.asarray(np.digitize(deg, np.quantile(deg, [0.33, 0.66])))
-
-opt = adamw_init(params)
-lr = warmup_cosine(3e-3, warmup=20, total=args.steps)
-val_grad = jax.jit(jax.value_and_grad(
-    lambda p: model.loss(p, feats, graphs, labels)))
-pred_fn = jax.jit(lambda p: model.apply(p, feats, graphs).argmax(-1))
 
 t0 = time.time()
-for step in range(args.steps):
-    loss, grads = val_grad(params)
-    params, opt = adamw_update(grads, opt, params, lr(opt.step))
+
+
+def progress(step, loss):
     if step % 25 == 0 or step == args.steps - 1:
-        acc = float((pred_fn(params) == labels).mean())
-        print(f"step {step:4d}  loss {float(loss):.4f}  acc {acc:.3f}  "
+        print(f"step {step:4d}  loss {loss:.4f}  "
               f"({(time.time() - t0) / (step + 1):.2f}s/step)")
-print("done")
+
+
+out = fit(model, graphs, feats, labels, masks, epochs=args.steps,
+          na_backend=args.na_backend, epoch_callback=progress)
+print(f"done [{args.na_backend}]: train_acc {out['train_acc']:.3f}  "
+      f"val_acc {out['val_acc']:.3f}  test_acc {out['test_acc']:.3f}")

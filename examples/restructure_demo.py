@@ -3,10 +3,9 @@ the buffer-thrashing measurement of paper Figs. 3/4/17.
 
   PYTHONPATH=src python examples/restructure_demo.py
 """
-import numpy as np
 
 from repro.core.buffersim import na_edge_stream_original, simulate_na
-from repro.core.restructure import decouple, recouple, restructure
+from repro.core.restructure import decouple, recouple
 from repro.hetero import make_dataset
 
 for ds in ("ACM", "DBLP", "IMDB"):

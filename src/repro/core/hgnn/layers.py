@@ -16,10 +16,16 @@ Two NA families live here:
     Pallas NA kernels (kernels/seg_sum.py, kernels/edge_softmax.py) over
     features permuted into the renumbered banded layout — the executed
     form of the paper's GFP stage.
+
+Both families are differentiable end to end: the jnp primitives by
+construction, the banded ones through the custom VJPs the kernels carry
+(backward is a jnp gather/segment-add over the packing's cached edge
+map — see kernels/seg_sum.py and kernels/ops.py), so ``jax.grad`` of a
+model loss agrees between executors to float tolerance.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

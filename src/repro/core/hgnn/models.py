@@ -14,7 +14,7 @@ Paper §5.3 configuration: hidden 64, layers {3: RGAT, 3: RGCN, 2: S-HGN}.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -242,6 +242,13 @@ class HGNN:
                        the returned logits keep global vertex numbering.
         ``kernel_backend`` ("interpret" | "pallas") only applies to the
         banded path.
+
+        Both executors are differentiable: the banded NA kernels carry
+        custom VJPs (kernels/seg_sum.py, kernels/ops.py) whose backward
+        gathers through the cached packing, so ``jax.grad`` of a loss
+        built on this apply works identically on either backend — the
+        training path (train/hgnn_step.py) runs banded with the same
+        cached ``BandedBatch`` list across every step.
         """
         cfg = self.cfg
         if na_backend not in ("jnp", "banded"):
@@ -317,6 +324,10 @@ class HGNN:
     def loss(self, params, features, graphs, labels: jax.Array,
              mask: Optional[jax.Array] = None, na_backend: str = "jnp",
              kernel_backend: str = "interpret") -> jax.Array:
+        """Masked cross-entropy over ``cfg.target_type`` vertices
+        (semi-supervised node classification).  Differentiable on both NA
+        executors: ``jax.grad(m.loss)(..., na_backend="banded")`` matches
+        the jnp backend's gradients to float tolerance."""
         logits = self.apply(params, features, graphs,
                             na_backend=na_backend,
                             kernel_backend=kernel_backend)

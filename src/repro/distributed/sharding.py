@@ -16,7 +16,7 @@ pure DP between pods).  ``fsdp_pods=True`` extends FSDP across
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np

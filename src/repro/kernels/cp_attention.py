@@ -22,7 +22,6 @@ full 2x causal saving, balanced.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -23,6 +23,14 @@ non-consecutive revisits, which the restructured schedule produces when a
 backbone destination's edges span two subgraphs.  Bands are aligned to
 BAND-row units so the feature BlockSpec index is just the band id
 (scalar-prefetched).
+
+``seg_sum_na`` is differentiable: a ``jax.custom_vjp`` wraps the Pallas
+call, and the backward pass is a gather through the same cached
+edge -> (block, slot) map — ``grad_h[s] = sum_{e: src_e=s} w_e g[dst_e]``
+and (for traced blocked weights, the attention path) ``grad_w[b, k] =
+h[src] . g[dst]`` — composed in jnp over device-resident flat edge
+indices derived once per packing.  No host re-packing happens on the
+backward path, so a cached ``BandedBatch`` serves training steps as-is.
 """
 from __future__ import annotations
 
@@ -159,9 +167,61 @@ class PackedEdges:
         dm = getattr(self, "_device_map", None)
         if dm is None:
             blk, slot = self.edge_map()
-            dm = (jnp.asarray(blk), jnp.asarray(slot))
+            # ensure_compile_time_eval: the first call may happen inside a
+            # jitted train step's trace — the cached arrays must be
+            # concrete, not tracers, or they leak into later traces
+            with jax.ensure_compile_time_eval():
+                dm = (jnp.asarray(blk), jnp.asarray(slot))
             self._device_map = dm
         return dm
+
+    def flat_global_edges(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(src, dst) global ids of the flat scheduled stream, recovered
+        from the blocked layout (memoized).  This is the index map the
+        VJPs gather through: the banded forward and its backward agree on
+        edge order by construction because both read the same blocks."""
+        fe = getattr(self, "_flat_edges", None)
+        if fe is None:
+            blk, slot = self.edge_map()
+            src = (
+                self.src_local[blk, slot].astype(np.int64)
+                + self.band[blk].astype(np.int64) * self.src_band
+            )
+            dst = (
+                self.dst_local[blk, slot].astype(np.int64)
+                + self.dst_tile[blk].astype(np.int64) * self.dst_tile_rows
+            )
+            fe = (src.astype(np.int32), dst.astype(np.int32))
+            self._flat_edges = fe
+        return fe
+
+    def device_flat_edges(self) -> Tuple[jax.Array, jax.Array]:
+        """Device-resident ``flat_global_edges()`` (uploaded once; the
+        backward pass of every layer of every train step reuses it)."""
+        dfe = getattr(self, "_device_flat_edges", None)
+        if dfe is None:
+            src, dst = self.flat_global_edges()
+            with jax.ensure_compile_time_eval():  # see device_edge_map
+                dfe = (jnp.asarray(src), jnp.asarray(dst))
+            self._device_flat_edges = dfe
+        return dfe
+
+    def device_blocked(self) -> Tuple[jax.Array, ...]:
+        """Device-resident copies of the static block arrays consumed by
+        the NA kernel (band, dst_tile, first_in_tile, src_local,
+        dst_local), uploaded once per packing."""
+        db = getattr(self, "_device_blocked", None)
+        if db is None:
+            with jax.ensure_compile_time_eval():  # see device_edge_map
+                db = (
+                    jnp.asarray(self.band),
+                    jnp.asarray(self.dst_tile),
+                    jnp.asarray(self.first_in_tile),
+                    jnp.asarray(self.src_local),
+                    jnp.asarray(self.dst_local),
+                )
+            self._device_blocked = db
+        return db
 
 
 def _first_touch_flags(dt: np.ndarray) -> np.ndarray:
@@ -363,18 +423,84 @@ def _seg_sum_call(
     )(band, dst_tile, first, src_local, dst_local, weight, h)
 
 
+def _build_banded_matvec(packed: PackedEdges, interpret: bool,
+                         weight_grad: bool):
+    """``custom_vjp``-wrapped banded matvec for one packing.
+
+    Forward is the Pallas kernel over the padded feature matrix; backward
+    is a jnp gather/segment-add through the packing's cached flat edge map
+    (``device_flat_edges``) — the transpose of the one-hot matmuls the
+    kernel performs, with no host re-packing.  ``weight_grad=False`` skips
+    the (E, D) weight-cotangent product for constant weights (the mean-NA
+    path, whose ones-mask never needs a gradient).
+    """
+    num_dst_tiles = max(1, -(-packed.num_dst // packed.dst_tile_rows))
+    band, dtile, first, srcl, dstl = packed.device_blocked()
+
+    def primal(h_pad, w):
+        return _seg_sum_call(
+            band, dtile, first, srcl, dstl, w, h_pad,
+            num_dst_tiles, packed.src_band, packed.dst_tile_rows, interpret,
+        )
+
+    @jax.custom_vjp
+    def matvec(h_pad, w):
+        return primal(h_pad, w)
+
+    def fwd(h_pad, w):
+        return primal(h_pad, w), (h_pad, w)
+
+    def bwd(res, g):
+        h_pad, w = res
+        src_g, dst_g = packed.device_flat_edges()
+        blk, slot = packed.device_edge_map()
+        w_e = w[blk, slot]  # (E,) weights of the scheduled stream
+        g_e = g[dst_g]  # (E, D) output cotangents gathered per edge
+        grad_h = jnp.zeros_like(h_pad).at[src_g].add(
+            (w_e[:, None] * g_e).astype(h_pad.dtype))
+        if weight_grad:
+            grad_w = jnp.zeros_like(w).at[blk, slot].add(
+                jnp.sum(h_pad[src_g].astype(jnp.float32) * g_e, axis=1))
+        else:
+            grad_w = jnp.zeros_like(w)
+        return grad_h, grad_w
+
+    matvec.defvjp(fwd, bwd)
+    return matvec
+
+
+def banded_matvec_vjp(packed: PackedEdges, interpret: bool,
+                      weight_grad: bool):
+    """Memoized accessor for ``_build_banded_matvec`` — one function
+    identity per (packing, interpret, weight_grad), so an outer ``jax.jit``
+    train step retraces nothing when the same cached packing serves every
+    step (grad-safe ``BandedBatch`` reuse)."""
+    cache = getattr(packed, "_vjp_fns", None)
+    if cache is None:
+        cache = {}
+        packed._vjp_fns = cache
+    key = (interpret, weight_grad)
+    fn = cache.get(key)
+    if fn is None:
+        fn = _build_banded_matvec(packed, interpret, weight_grad)
+        cache[key] = fn
+    return fn
+
+
 def seg_sum_na(
     packed: PackedEdges,
     h: jax.Array,
     interpret: bool = True,
     weights: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Weighted NA aggregation; returns (num_dst, D).
+    """Weighted NA aggregation; returns (num_dst, D).  Differentiable in
+    ``h`` and (when given) ``weights`` via the packing's custom VJP.
 
     ``weights`` optionally overrides ``packed.weight`` with an already
     device-resident (nb, EB) blocked array (see
     ``PackedEdges.scatter_blocks``) — the attention path feeds per-layer
-    alpha this way without re-materializing host-side blocks.
+    alpha this way without re-materializing host-side blocks; its
+    cotangent flows back through the blocked layout.
     """
     band_units = int(packed.band.max()) + 1 if packed.num_blocks else 1
     n_src_pad = max(band_units * packed.src_band, packed.num_src)
@@ -383,14 +509,9 @@ def seg_sum_na(
             [h, jnp.zeros((n_src_pad - h.shape[0], h.shape[1]), h.dtype)], axis=0
         )
     num_dst_tiles = max(1, -(-packed.num_dst // packed.dst_tile_rows))
+    weight_grad = weights is not None
     w = jnp.asarray(packed.valid_weight()) if weights is None else jnp.asarray(weights)
-    out = _seg_sum_call(
-        jnp.asarray(packed.band), jnp.asarray(packed.dst_tile),
-        jnp.asarray(packed.first_in_tile),
-        jnp.asarray(packed.src_local), jnp.asarray(packed.dst_local),
-        w, h,
-        num_dst_tiles, packed.src_band, packed.dst_tile_rows, interpret,
-    )
+    out = banded_matvec_vjp(packed, interpret, weight_grad)(h, w)
     # tiles never visited by any block hold uninitialized memory -> zero them
     touched = np.zeros(num_dst_tiles, bool)
     if packed.num_blocks:

@@ -42,7 +42,7 @@ from repro.distributed.sharding import cache_pspecs, data_pspec, param_pspecs
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import SHAPES, ArchConfig, ShapeSpec
 from repro.models.lm import LM
-from repro.train.train_step import build_train_step, init_train_state, state_pspecs
+from repro.train.train_step import build_train_step, init_train_state
 
 # ----------------------------------------------------------- constants ----
 PEAK_FLOPS = 197e12  # bf16 per chip
@@ -120,7 +120,9 @@ def input_specs(arch: str, shape: str, mesh: Mesh,
     spec = SHAPES[shape]
     b, s = spec.global_batch, spec.seq_len
     dp = data_pspec(mesh, b)
-    sd = lambda shp, dt, ps: jax.ShapeDtypeStruct(shp, dt, sharding=NamedSharding(mesh, ps))
+    def sd(shp, dt, ps):
+        return jax.ShapeDtypeStruct(shp, dt, sharding=NamedSharding(mesh, ps))
+
     use_embeds = cfg.frontend != "none"
     out: Dict[str, Any] = {"spec": spec, "use_embeds": use_embeds}
     if spec.kind in ("train", "prefill"):
@@ -179,7 +181,6 @@ def build_cell_fn(cfg: ArchConfig, spec: ShapeSpec, mesh: Mesh,
     ins = input_specs(cfg.name, spec.name, mesh, model=model)
     # NB: input_specs uses the original arch name; shapes don't depend on G.
     b = spec.global_batch
-    dp = data_pspec(mesh, b)
 
     if spec.kind == "train":
         mb = microbatches if microbatches is not None else _microbatches(c, spec, mesh)
@@ -388,7 +389,9 @@ def roofline_cell(arch: str, shape: str, calibrate: bool = True,
             G = cfg.num_groups
             mb = (microbatches if microbatches is not None
                   else _microbatches(cfg, spec, mesh)) if spec.kind == "train" else 1
-            lin = lambda a, b_: a + (G - 1) * (b_ - a)
+            def lin(a, b_):
+                return a + (G - 1) * (b_ - a)
+
             # cost_analysis flops/bytes and the parsed collective bytes are
             # all PER-DEVICE (the post-SPMD program); keep them per-chip.
             flops = lin(pts[1]["flops"], pts[2]["flops"]) * mb

@@ -14,7 +14,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_debug_mesh
@@ -23,8 +22,7 @@ from repro.train.checkpoint import CheckpointManager
 from repro.train.data import SyntheticTokens
 from repro.train.fault_tolerance import FaultTolerantRunner
 from repro.train.optim import warmup_cosine
-from repro.train.train_step import (build_train_step, init_train_state,
-                                    state_pspecs)
+from repro.train.train_step import build_train_step, init_train_state
 
 
 def main():

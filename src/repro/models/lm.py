@@ -11,8 +11,6 @@ pytree stacked the same way as the parameters.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -23,12 +23,12 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, Hashable, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.restructure import RestructuredGraph
-from repro.hetero.graph import HetGraph, Relation
+from repro.hetero.graph import Relation
 
 
 @dataclasses.dataclass

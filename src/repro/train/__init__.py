@@ -1,10 +1,24 @@
-"""Training substrate: optimizer, data, checkpointing, fault tolerance."""
+"""Training substrate: optimizer, data, checkpointing, fault tolerance,
+and the semi-supervised HGNN step over either NA executor."""
 from repro.train.optim import AdamWState, adamw_init, adamw_update, clip_by_global_norm
 from repro.train.data import SyntheticTokens
 from repro.train.checkpoint import CheckpointManager
 from repro.train.train_step import build_train_step, TrainState
+from repro.train.hgnn_step import (
+    HGNNTrainState,
+    degree_bucket_labels,
+    fit,
+    init_train_state,
+    make_eval_fn,
+    make_train_step,
+    propagated_feature_labels,
+    semi_supervised_masks,
+)
 
 __all__ = [
     "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
     "SyntheticTokens", "CheckpointManager", "build_train_step", "TrainState",
+    "HGNNTrainState", "degree_bucket_labels", "fit", "init_train_state",
+    "make_eval_fn", "make_train_step", "propagated_feature_labels",
+    "semi_supervised_masks",
 ]

@@ -15,7 +15,6 @@ format, per-shard files); single-process here writes full arrays, and
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil
@@ -25,7 +24,7 @@ from typing import Any, Optional, Tuple
 import jax
 import ml_dtypes
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import Mesh, NamedSharding
 
 
 def _np_dtype(name: str) -> np.dtype:

@@ -8,7 +8,7 @@ ZeRO-sharded wherever parameters are.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,9 @@ class AdamWState:
 
 
 def adamw_init(params: Any) -> AdamWState:
-    zeros = lambda p: jnp.zeros(jnp.shape(p), jnp.float32)
+    def zeros(p):
+        return jnp.zeros(jnp.shape(p), jnp.float32)
+
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         mu=jax.tree.map(zeros, params),

@@ -7,8 +7,7 @@ shardings and donated state; microbatching (gradient accumulation over a
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,117 @@
+"""The CI bench-regression gate must fire on regressed points, pass
+clean ones, and never compare across scales."""
+import copy
+import json
+
+import pytest
+
+from benchmarks.check_regression import (compare, extract_metrics, main,
+                                         pick_baseline)
+
+GFP_POINT = {
+    "schema": "gfp_bench/v1",
+    "scale": 0.15,
+    "model_scale": 0.15,
+    "datasets": {
+        "ACM": {
+            "models": {
+                "rgcn": {"us_per_layer_jnp": 100.0,
+                         "us_per_layer_banded": 800.0},
+                "rgat": {"us_per_layer_jnp": 200.0,
+                         "us_per_layer_banded": 1500.0},
+            },
+            "hbm": {
+                "PAP": {"tile_loads_original": 1000,
+                        "tile_loads_restructured": 500},
+            },
+        },
+    },
+}
+
+TRAIN_POINT = {
+    "schema": "train_bench/v1",
+    "scale": 0.15,
+    "epochs": 8,
+    "datasets": {"ACM": {"latency_ratio_banded_vs_jnp": 3.0}},
+}
+
+
+def test_extract_metrics_gfp():
+    m = extract_metrics(GFP_POINT)
+    assert m["gfp/ACM/rgcn/latency_ratio"] == pytest.approx(8.0)
+    assert m["gfp/ACM/hbm/PAP/tile_ratio"] == pytest.approx(0.5)
+    assert extract_metrics(TRAIN_POINT) == {
+        "train/ACM/latency_ratio": pytest.approx(3.0)}
+    with pytest.raises(ValueError):
+        extract_metrics({"schema": "mystery/v9"})
+
+
+def test_gate_fires_on_2x_slower_point():
+    """Acceptance case: a synthetic 2x-slower banded latency (and a 2x
+    tile-load blowup) must fail the 20% gate."""
+    bad = copy.deepcopy(GFP_POINT)
+    models = bad["datasets"]["ACM"]["models"]
+    models["rgcn"]["us_per_layer_banded"] *= 2
+    bad["datasets"]["ACM"]["hbm"]["PAP"]["tile_loads_restructured"] *= 2
+    failures = compare(GFP_POINT, bad, tolerance=0.2)
+    assert len(failures) == 2
+    assert any("rgcn/latency_ratio" in f for f in failures)
+    assert any("hbm/PAP/tile_ratio" in f for f in failures)
+
+
+def test_gate_passes_clean_and_within_tolerance():
+    assert compare(GFP_POINT, GFP_POINT, tolerance=0.2) == []
+    near = copy.deepcopy(GFP_POINT)
+    near["datasets"]["ACM"]["models"]["rgcn"]["us_per_layer_banded"] *= 1.15
+    assert compare(GFP_POINT, near, tolerance=0.2) == []
+
+
+def test_gate_flags_dropped_metric():
+    partial = copy.deepcopy(GFP_POINT)
+    del partial["datasets"]["ACM"]["models"]["rgat"]
+    failures = compare(GFP_POINT, partial, tolerance=0.2)
+    assert len(failures) == 1 and "missing from candidate" in failures[0]
+
+
+def test_baseline_selection_is_scale_matched():
+    """Scale adjustment: a scale-1.0 committed point must never gate a
+    0.15 smoke run (tiny graphs have ~1.0 tile ratios by construction)."""
+    full = copy.deepcopy(GFP_POINT)
+    full["scale"], full["model_scale"] = 1.0, 0.3
+    assert pick_baseline([full], GFP_POINT) is None
+    assert pick_baseline([full, GFP_POINT], GFP_POINT) is GFP_POINT
+    # schema must match too
+    assert pick_baseline([TRAIN_POINT], GFP_POINT) is None
+    # train points at one scale but different run shapes (the committed
+    # 60-epoch 3-dataset trajectory vs the 8-epoch ACM-only CI smoke)
+    # must not gate each other: epochs and dataset set are in the key
+    full_train = copy.deepcopy(TRAIN_POINT)
+    full_train["epochs"] = 60
+    full_train["datasets"]["IMDB"] = {"latency_ratio_banded_vs_jnp": 4.0}
+    assert pick_baseline([full_train], TRAIN_POINT) is None
+    assert pick_baseline([full_train, TRAIN_POINT], TRAIN_POINT) is TRAIN_POINT
+
+
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(json.dumps(obj))
+    return str(p)
+
+
+def test_main_exit_codes(tmp_path):
+    base = _write(tmp_path, "base.json", GFP_POINT)
+    good = _write(tmp_path, "good.json", GFP_POINT)
+    bad_point = copy.deepcopy(GFP_POINT)
+    bad_point["datasets"]["ACM"]["models"]["rgcn"]["us_per_layer_banded"] *= 2
+    bad = _write(tmp_path, "bad.json", bad_point)
+    other_scale = copy.deepcopy(GFP_POINT)
+    other_scale["scale"] = 1.0
+    far = _write(tmp_path, "far.json", other_scale)
+
+    assert main(["--candidate", good, "--baseline", base]) == 0
+    assert main(["--candidate", bad, "--baseline", base]) == 1
+    # no scale-matching baseline: report, don't fail
+    assert main(["--candidate", good, "--baseline", far]) == 0
+    # widened tolerance lets the 2x point pass only when asked to
+    assert main(["--candidate", bad, "--baseline", base,
+                 "--tolerance", "1.5"]) == 0

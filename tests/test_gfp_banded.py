@@ -9,7 +9,6 @@ import numpy as np
 import pytest
 
 from repro.core.hgnn import HGNN, HGNNConfig
-from repro.core.hgnn.models import BandedBatch, SemanticGraphBatch
 from repro.kernels import ops, ref
 from repro.kernels.seg_sum import (pack_edge_blocks,
                                    pack_edge_blocks_reference, seg_sum_na)

@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps against ref.py oracles,
 all in interpret mode (CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

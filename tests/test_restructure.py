@@ -8,8 +8,7 @@ import pytest
 from proptest import seeded_property
 
 from repro.core.buffersim import na_edge_stream_original, simulate_na
-from repro.core.restructure import (decouple, recouple, restructure,
-                                    select_backbone)
+from repro.core.restructure import decouple, restructure
 from repro.hetero import make_dataset
 from repro.hetero.graph import Relation
 

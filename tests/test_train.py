@@ -1,11 +1,9 @@
 """Training substrate tests: optimizer, checkpointing, fault tolerance,
 gradient compression, data determinism."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCHS, reduced
 from repro.launch.mesh import make_debug_mesh
