@@ -8,7 +8,12 @@ Reports, per dataset/workload:
                        counters;
   * ``warm``         — the repeated request served from the semantic-graph
                        cache (the multi-model / multi-target scenario);
-  * the cached-request speedup over the cold build (the pipeline's win).
+  * the cached-request speedup over the cold build (the pipeline's win);
+  * ``serve``        — the multi-tenant ``HGNNServeEngine`` over one
+                       ``repro.api.Session``: several graphs registered,
+                       queued requests batched through compiled forwards,
+                       per-request p50 latency and the session's
+                       warm-cache hit-rate.
 
 Run:  PYTHONPATH=src:. python benchmarks/pipeline_bench.py [scale]
 """
@@ -18,8 +23,13 @@ import sys
 import time
 from typing import List
 
+import numpy as np
+
 from benchmarks.common import row
+from repro.api import ExecutorSpec, Session
+from repro.core.hgnn import HGNNConfig
 from repro.pipeline import FrontendPipeline, PipelineConfig, SemanticGraphCache
+from repro.serve import HGNNRequest, HGNNServeEngine
 
 WORKLOADS = {
     "ACM": ["APA", "PAP", "PSP", "APSPA"],
@@ -78,10 +88,58 @@ def bench_pipeline(scale: float = 0.25) -> List[str]:
     return out
 
 
+# registered tenants for the serving section — two per graph with
+# overlapping metapath sets, so later registrations hit the semantic-graph
+# cache (name, dataset, targets, target type, model)
+SERVE_TENANTS = [
+    ("acm/rgat", "ACM", ["APA", "PAP", "PSP"], "P", "rgat"),
+    ("acm/rgcn", "ACM", ["PAP", "PSP", "PTP"], "P", "rgcn"),
+    ("imdb/rgcn", "IMDB", ["MAM", "MDM"], "M", "rgcn"),
+    ("imdb/shgn", "IMDB", ["MDM", "MKM"], "M", "shgn"),
+]
+SERVE_REQUESTS = 24
+
+
+def bench_serving(scale: float = 0.25) -> List[str]:
+    """Multi-tenant serving: >= 2 graphs on one engine, batched requests."""
+    from repro.pipeline.frontend import _dataset
+
+    out = []
+    engine = HGNNServeEngine(session=Session(ExecutorSpec()))
+    for name, ds, targets, target_type, model in SERVE_TENANTS:
+        graph = _dataset(ds, 0, float(scale))
+        engine.register(name, graph, targets, HGNNConfig(
+            model=model, hidden=64, num_layers=2, num_classes=3,
+            target_type=target_type))
+    rng = np.random.default_rng(0)
+    names = [t[0] for t in SERVE_TENANTS]
+    engine.submit([
+        HGNNRequest(i, names[i % len(names)],
+                    nodes=rng.integers(0, 16, size=8))
+        for i in range(SERVE_REQUESTS)
+    ])
+    t0 = time.perf_counter()
+    responses = engine.step()
+    wall_us = (time.perf_counter() - t0) * 1e6
+    assert len(responses) == SERVE_REQUESTS
+    s = engine.stats()
+    out.append(row(
+        "serve/batch", wall_us,
+        f"requests={s['requests_served']};forwards={s['forwards']};"
+        f"batching={s['batching_factor']:.1f}"))
+    out.append(row(
+        "serve/request_p50", s["latency_us_p50"],
+        f"p95={s['latency_us_p95']:.0f};"
+        f"warm_cache_hit_rate={s['session'].hit_rate:.2f}"))
+    return out
+
+
 def main() -> None:
     scale = float(sys.argv[1]) if len(sys.argv) > 1 else 0.25
     print("name,us_per_call,derived")
     for line in bench_pipeline(scale):
+        print(line, flush=True)
+    for line in bench_serving(scale):
         print(line, flush=True)
 
 

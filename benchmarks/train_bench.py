@@ -1,9 +1,10 @@
 """HGNN training benchmark: the banded executor on the full workload.
 
 PR 2 measured inference; this measures what the ROADMAP called the
-"banded training path": per-epoch latency and convergence of the jitted
-semi-supervised train step (train/hgnn_step.py) on ``na_backend="jnp"``
-vs ``na_backend="banded"`` — forward on the Pallas NA kernels, backward
+"banded training path": per-epoch latency and convergence of
+``CompiledHGNN.fit`` (the jitted semi-supervised step of
+train/hgnn_step.py) compiled through a jnp-spec vs a banded-spec
+``repro.api.Session`` — forward on the Pallas NA kernels, backward
 through their custom VJPs over the same cached ``PackedEdges``.
 
 Per dataset fixture (ACM/rgat, IMDB/shgn, DBLP/rgcn — all three model
@@ -30,13 +31,13 @@ import json
 import time
 from typing import Dict, List, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
-from repro.core.hgnn import HGNN, HGNNConfig
-from repro.pipeline import FrontendPipeline, PipelineConfig, SemanticGraphCache
-from repro.train import fit, propagated_feature_labels, semi_supervised_masks
+from repro.api import ExecutorSpec, Session, device_features
+from repro.core.hgnn import HGNNConfig
+from repro.pipeline import SemanticGraphCache
+from repro.train import propagated_feature_labels, semi_supervised_masks
 
 # dataset -> (targets, target type, model family)
 WORKLOADS: Dict[str, Tuple[List[str], str, str]] = {
@@ -56,33 +57,39 @@ def bench_train(scale: float, epochs: int, datasets: List[str]
     lines: List[str] = []
     point: Dict = {"schema": "train_bench/v1", "scale": scale,
                    "epochs": epochs, "datasets": {}}
+    # one shared cache: the banded session's compile reuses every frontend
+    # product the jnp session built (and packs exactly once) — both
+    # executors train over the same cached artifacts, the repro.api way
+    cache = SemanticGraphCache()
+    sessions = {
+        "jnp": Session(ExecutorSpec(planner="ctt", sgb_backend="host"),
+                       cache=cache),
+        "banded": Session(ExecutorSpec(planner="ctt", sgb_backend="host",
+                                       na_executor="banded"), cache=cache),
+    }
     for ds in datasets:
         targets, target_type, model_name = WORKLOADS[ds]
         graph = _dataset(ds, 0, float(scale))
-        pipe = FrontendPipeline(
-            PipelineConfig(planner="ctt", backend="host", pack=True),
-            cache=SemanticGraphCache())
-        res = pipe.run(graph, targets)
-        feats = {t: jnp.asarray(x) for t, x in graph.features.items()}
-        n = graph.num_vertices[target_type]
-        labels = propagated_feature_labels(
-            res.semantic, targets, graph.features, n)
-        masks = semi_supervised_masks(n, seed=0)
+        feats = device_features(graph)
         cfg = HGNNConfig(model=model_name, hidden=HIDDEN, num_layers=LAYERS,
                          num_classes=3, target_type=target_type)
-        m = HGNN(cfg, graph.feature_dims, graph.num_vertices, sorted(targets))
+        compiled = {b: s.compile(graph, targets, cfg)
+                    for b, s in sessions.items()}
+        n = graph.num_vertices[target_type]
+        labels = propagated_feature_labels(
+            compiled["jnp"].semantic, targets, graph.features, n)
+        masks = semi_supervised_masks(n, seed=0)
 
         entry: Dict = {"model": model_name, "targets": targets}
-        for backend, graphs in (("jnp", res.batches()),
-                                ("banded", res.banded_batches())):
+        for backend, c in compiled.items():
             marks: List[float] = [time.perf_counter()]
 
             def mark(epoch: int, loss: float) -> None:
                 marks.append(time.perf_counter())
 
             t0 = time.perf_counter()
-            out = fit(m, graphs, feats, labels, masks, epochs=epochs,
-                      na_backend=backend, epoch_callback=mark)
+            out = c.fit(feats, labels, masks, epochs=epochs,
+                        epoch_callback=mark)
             total_s = time.perf_counter() - t0
             # first epoch pays jit compilation; p50 over the rest is the
             # steady-state per-epoch cost

@@ -1,41 +1,73 @@
-"""Quickstart: the paper's full pipeline on synthetic ACM in ~30 lines.
+"""Quickstart: the paper's full pipeline through one `repro.api.Session`.
 
-  PYTHONPATH=src python examples/quickstart.py
+A Session owns the cached frontend (SGB -> Graph Restructurer -> GFP
+packing); `compile` binds a model to those products once, and the result
+runs with no backend kwargs.  The same session then feeds the
+multi-tenant serving engine.
+
+  PYTHONPATH=src python examples/quickstart.py [scale]
 """
-import jax
-import jax.numpy as jnp
+import sys
 
-from repro.core.hgnn import HGNN, HGNNConfig
-from repro.core.hgnn.models import graphs_from_pipeline
+import numpy as np
+
+from repro.api import ExecutorSpec, Session, device_features
+from repro.core.hgnn import HGNNConfig
 from repro.hetero import make_dataset
-from repro.pipeline import FrontendPipeline, PipelineConfig
+from repro.serve import HGNNRequest, HGNNServeEngine
+
+scale = float(sys.argv[1]) if len(sys.argv) > 1 else 0.5
 
 # 1) heterogeneous graph (synthetic ACM, Table-2-faithful)
-g = make_dataset("ACM", scale=0.5)
+g = make_dataset("ACM", scale=scale)
 print(f"HetG: {g.num_vertices}  edges={g.total_edges()}")
 
-# 2+3) frontend pipeline: CTT-planned SGB + Graph Restructurer as one
-# cached engine (backend="device" lowers SGB onto the Pallas SpGEMM)
+# 2) one session = one executor spec + one cached frontend engine
+sess = Session(ExecutorSpec(planner="ctt", sgb_backend="host"))
+
+# 3) compile-and-run: SGB + restructure happen here (once), and the
+# compiled model exposes init/forward/loss/fit with no backend kwargs
 targets = ["APA", "PAP", "PSP", "APSPA"]
-pipe = FrontendPipeline(PipelineConfig(planner="ctt", backend="host"))
-res = pipe.run(g, targets)
+shgn = sess.compile(g, targets, HGNNConfig(
+    model="shgn", hidden=64, num_layers=2, num_classes=3, target_type="P"))
+res = shgn.frontend
 print(f"SGB: {len(res.sgb.per_step)} compositions, "
       f"{res.sgb.cost.macs / 1e6:.1f} M MACs, "
       f"{res.timings['total'] * 1e3:.0f} ms frontend")
 
-# 4) GFP stage: Simple-HGN over the restructured semantic graphs; the
-# batches are built once and shared by every model consuming this graph
-graphs = graphs_from_pipeline(res)
-cfg = HGNNConfig(model="shgn", hidden=64, num_layers=2, num_classes=3,
-                 target_type="P")
-model = HGNN(cfg, g.feature_dims, g.num_vertices, sorted(targets))
-params = model.init(jax.random.key(0))
-feats = {t: jnp.asarray(x) for t, x in g.features.items()}
-logits = model.apply(params, feats, graphs)
-print(f"GFP: logits {logits.shape}, "
-      f"prediction histogram {jnp.bincount(logits.argmax(-1), length=3)}")
+feats = device_features(g)
+params = shgn.init(0)
+logits = shgn.forward(params, feats)
+print(f"GFP: logits {logits.shape}, prediction histogram "
+      f"{np.bincount(np.asarray(logits).argmax(-1), minlength=3)}")
 
-# 5) a repeated request (multi-model scenario) is served from the cache
-res2 = pipe.run(g, targets)
-print(f"warm frontend: {res2.timings['total'] * 1e6:.0f} us "
-      f"(hits={res2.cache_stats.hits}, sgb_skipped={res2.sgb is None})")
+# 4) a second model over the same graph is pure reuse: the session serves
+# every frontend product from cache (the multi-model scenario)
+rgcn = sess.compile(g, targets, HGNNConfig(
+    model="rgcn", hidden=64, num_layers=2, num_classes=3, target_type="P"))
+rgcn.forward(rgcn.init(0), feats)
+st = sess.stats()
+print(f"warm compile: frontend ran {st.frontend_runs}x, "
+      f"served {st.frontend_served}x from the session "
+      f"(one PackedEdges/batch set shared by both models)")
+
+# 5) multi-tenant serving: register >1 graph on one engine; queued
+# requests batch through one compiled forward per graph fingerprint
+imdb = make_dataset("IMDB", scale=scale)
+engine = HGNNServeEngine(session=sess)
+engine.register("acm", g, targets, shgn.cfg)
+engine.register("imdb", imdb, ["AMA", "MAM", "MKM"], HGNNConfig(
+    model="rgat", hidden=64, num_layers=2, num_classes=3, target_type="M"))
+engine.submit([
+    HGNNRequest(0, "acm", nodes=np.arange(8)),
+    HGNNRequest(1, "imdb", nodes=np.arange(4)),
+    HGNNRequest(2, "acm"),  # nodes=None: every target vertex
+])
+for r in engine.step():
+    print(f"served rid={r.rid} graph={r.graph} logits={r.logits.shape} "
+          f"latency={r.latency_us / 1e3:.1f} ms "
+          f"(batched with {r.batched_with})")
+s = engine.stats()
+print(f"serve: batching_factor={s['batching_factor']:.1f} "
+      f"p50={s['latency_us_p50'] / 1e3:.1f} ms over "
+      f"{s['graphs_registered']} graphs")

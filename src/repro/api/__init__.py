@@ -1,0 +1,20 @@
+"""repro.api — the unified execution surface.
+
+One ``ExecutorSpec`` declares how to run (planner, SGB backend, NA
+executor, kernel backend, layout policy); one ``Session`` owns the cached
+frontend engine; ``session.compile(graph, targets, HGNNConfig)`` returns
+a ``CompiledHGNN`` that runs with no backend kwargs.  See
+``repro.serve.HGNNServeEngine`` for the multi-tenant serving path built
+on top.
+"""
+from repro.api.session import (CompiledHGNN, Session, SessionStats,
+                               device_features)
+from repro.api.spec import ExecutorSpec
+
+__all__ = [
+    "CompiledHGNN",
+    "ExecutorSpec",
+    "Session",
+    "SessionStats",
+    "device_features",
+]

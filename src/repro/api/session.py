@@ -1,0 +1,271 @@
+"""Execution sessions: one compile-and-run surface for the whole stack.
+
+A ``Session`` owns a ``FrontendPipeline`` + ``SemanticGraphCache``
+configured from one ``ExecutorSpec`` and exposes a single entry point::
+
+    sess = Session(ExecutorSpec(na_executor="banded"))
+    compiled = sess.compile(graph, targets, HGNNConfig(model="rgat", ...))
+    params = compiled.init(0)
+    logits = compiled.forward(params, device_features(graph))
+
+``compile`` runs the frontend (SGB -> Restructure -> packing, cache-served
+where possible), builds the batch flavor the executor consumes — callers
+never pick ``batches()`` vs ``banded_batches()`` again — and binds it to
+the model in a ``CompiledHGNN`` whose ``init/forward/loss/fit/evaluate``
+take no backend kwargs.  Frontend products and compiled models are
+memoized on the session, so the multi-model scenario (rgcn + rgat + shgn
+over one HetG) packs each semantic graph exactly once and every later
+compile is pure reuse; ``session.stats()`` reports the cache hit-rates
+that prove it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.spec import ExecutorSpec
+from repro.core.hgnn.models import HGNN, HGNNConfig
+from repro.hetero.graph import HetGraph
+from repro.pipeline.cache import SemanticGraphCache
+from repro.pipeline.frontend import FrontendPipeline, FrontendResult
+
+
+def device_features(graph: HetGraph) -> Dict[str, jax.Array]:
+    """Upload a HetGraph's raw feature dict to device arrays (the form
+    every compiled entry point takes)."""
+    return {t: jnp.asarray(x) for t, x in graph.features.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionStats:
+    """One snapshot of everything a session reuses.
+
+    ``frontend_runs`` counts pipeline passes that actually executed;
+    ``frontend_served`` counts compile/frontend requests answered from the
+    session's own memo without touching the pipeline at all.  The cache
+    counters are cumulative for the session's ``SemanticGraphCache``
+    (which may be shared with other sessions — sharing is the point).
+    """
+
+    compiles: int
+    compiles_cached: int
+    frontend_runs: int
+    frontend_served: int
+    cache_hits: int
+    cache_misses: int
+    cache_evictions: int
+    cache_entries: int
+    cache_nbytes: int
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / max(1, self.cache_hits + self.cache_misses)
+
+
+class CompiledHGNN:
+    """A model bound to its frontend products and executor — no knobs left.
+
+    Holds the ``HGNN`` + the correct batch flavor for the session's
+    ``ExecutorSpec`` (``SemanticGraphBatch`` for jnp, ``BandedBatch`` over
+    the cached ``PackedEdges`` for banded) and exposes the full model
+    lifecycle.  ``forward``/``loss``/``evaluate`` are jitted once with the
+    batches closed over (they are host-side packings, not pytrees), so
+    repeated calls — the serving scenario — never retrace.
+    """
+
+    def __init__(self, session: "Session", spec: ExecutorSpec, model: HGNN,
+                 frontend: FrontendResult, graphs: List, fingerprint: str):
+        self.session = session
+        self.spec = spec
+        self.model = model
+        self.frontend = frontend
+        self.graphs = graphs
+        self.fingerprint = fingerprint
+        self._forward = None
+        self._loss = None
+        self._accuracy = None
+
+    # ------------------------------------------------------- conveniences --
+    @property
+    def cfg(self) -> HGNNConfig:
+        return self.model.cfg
+
+    @property
+    def semantic(self) -> Dict:
+        """The frontend's semantic graphs (label builders consume these)."""
+        return self.frontend.semantic
+
+    @property
+    def num_target(self) -> int:
+        """Vertex count of the classification target type."""
+        return self.model.num_vertices[self.cfg.target_type]
+
+    # ---------------------------------------------------------- lifecycle --
+    def init(self, key: "jax.Array | int" = 0) -> Dict:
+        """Parameter pytree; accepts a PRNG key or a plain int seed."""
+        if isinstance(key, int):
+            key = jax.random.key(key)
+        return self.model.init(key)
+
+    def forward(self, params, features) -> jax.Array:
+        """Logits for ``cfg.target_type`` vertices (jitted, no kwargs)."""
+        if self._forward is None:
+            spec = self.spec
+
+            def fwd(p, f):
+                return self.model.execute(
+                    p, f, self.graphs, na_executor=spec.na_executor,
+                    kernel_backend=spec.na_kernel_backend)
+
+            self._forward = jax.jit(fwd)
+        return self._forward(params, features)
+
+    def loss(self, params, features, labels, mask=None) -> jax.Array:
+        """Masked cross-entropy on the target type (jitted).  ``mask=None``
+        means every vertex counts (an all-ones mask keeps the trace
+        shape-static across masked and unmasked calls)."""
+        if self._loss is None:
+            spec = self.spec
+
+            def loss_fn(p, f, y, m):
+                return self.model.execute_loss(
+                    p, f, self.graphs, y, mask=m,
+                    na_executor=spec.na_executor,
+                    kernel_backend=spec.na_kernel_backend)
+
+            self._loss = jax.jit(loss_fn)
+        if mask is None:
+            mask = jnp.ones((self.num_target,), jnp.float32)
+        return self._loss(params, features, labels, mask)
+
+    def evaluate(self, params, features, labels, mask=None) -> jax.Array:
+        """Masked accuracy on the target type (jitted; delegates to the
+        train substrate's eval fn so the compiled and training paths share
+        one accuracy definition)."""
+        if self._accuracy is None:
+            from repro.train.hgnn_step import make_eval_fn
+
+            self._accuracy = make_eval_fn(self.model, self.graphs,
+                                          executor=self.spec)
+        if mask is None:
+            mask = jnp.ones((self.num_target,), jnp.float32)
+        return self._accuracy(params, features, labels, mask)
+
+    def fit(self, features, labels, masks, *, epochs: int = 100,
+            seed: int = 0, lr: float = 3e-3, weight_decay: float = 0.0,
+            epoch_callback=None) -> Dict:
+        """Full-graph semi-supervised training on the bound executor
+        (delegates to ``train.hgnn_step.fit`` — jitted AdamW step, custom
+        VJPs on the banded path — with the spec threaded through)."""
+        from repro.train.hgnn_step import fit as _fit
+
+        return _fit(self.model, self.graphs, features, labels, masks,
+                    epochs=epochs, seed=seed, lr=lr,
+                    weight_decay=weight_decay, executor=self.spec,
+                    epoch_callback=epoch_callback)
+
+
+class Session:
+    """One compile-and-run surface over one spec + one shared cache.
+
+    Pass an existing ``SemanticGraphCache`` to share frontend products
+    across sessions (e.g. a jnp session and a banded session over the same
+    datasets reuse each other's semantic graphs and restructure results —
+    the two-executor benchmarks do exactly this).
+
+    ``max_memo`` bounds the session's own frontend/compile memos (LRU,
+    like the underlying cache's ``max_entries``).  The default pins
+    everything for the session's lifetime — right for serving a fixed
+    tenant set; bound it for tenant-churn workloads so evicted cache
+    entries are actually freed.  Eviction only drops the session's pin:
+    already-returned ``CompiledHGNN`` objects keep working.
+    """
+
+    def __init__(self, spec: Optional[ExecutorSpec] = None,
+                 cache: Optional[SemanticGraphCache] = None,
+                 max_memo: Optional[int] = None):
+        self.spec = spec or ExecutorSpec()
+        self.cache = cache if cache is not None else SemanticGraphCache()
+        self.max_memo = max_memo
+        self.pipeline = FrontendPipeline(self.spec.pipeline_config(),
+                                         cache=self.cache)
+        self._frontends: "OrderedDict[Tuple[str, Tuple[str, ...]], FrontendResult]" = OrderedDict()
+        self._compiled: "OrderedDict[Tuple, CompiledHGNN]" = OrderedDict()
+        self._frontend_runs = 0
+        self._frontend_served = 0
+        self._compiles = 0
+        self._compiles_cached = 0
+
+    def _memo_put(self, memo: OrderedDict, key, value) -> None:
+        memo[key] = value
+        memo.move_to_end(key)
+        if self.max_memo is not None:
+            while len(memo) > self.max_memo:
+                memo.popitem(last=False)
+
+    # ------------------------------------------------------------ frontend --
+    def frontend(self, graph: HetGraph, targets: Sequence[str]
+                 ) -> FrontendResult:
+        """The frontend pass for ``(graph, targets)`` — run once per
+        session, then served from the session memo (and, across sessions,
+        from the shared cache)."""
+        key = (graph.fingerprint(), tuple(sorted(targets)))
+        res = self._frontends.get(key)
+        if res is None:
+            res = self.pipeline.run(graph, targets)
+            self._memo_put(self._frontends, key, res)
+            self._frontend_runs += 1
+        else:
+            self._frontends.move_to_end(key)
+            self._frontend_served += 1
+        return res
+
+    # ------------------------------------------------------------- compile --
+    def compile(self, graph: HetGraph, targets: Sequence[str],
+                cfg: HGNNConfig) -> CompiledHGNN:
+        """Bind a model to the cached frontend products for this graph.
+
+        The returned ``CompiledHGNN`` carries the batch flavor the spec's
+        executor consumes; compiling more models over the same
+        ``(graph, targets)`` reuses every frontend product (one
+        ``PackedEdges`` per semantic graph for the whole session), and an
+        identical ``(graph, targets, cfg)`` compile returns the same
+        object — including its jitted entry points.
+        """
+        fp = graph.fingerprint()
+        ckey = (fp, tuple(sorted(targets)), cfg)
+        self._compiles += 1
+        hit = self._compiled.get(ckey)
+        if hit is not None:
+            self._compiled.move_to_end(ckey)
+            self._compiles_cached += 1
+            return hit
+        res = self.frontend(graph, targets)
+        if self.spec.na_executor == "banded":
+            graphs = res.banded_batches()
+        else:
+            graphs = res.batches()
+        model = HGNN(cfg, graph.feature_dims, graph.num_vertices,
+                     sorted(targets))
+        compiled = CompiledHGNN(self, self.spec, model, res, graphs, fp)
+        self._memo_put(self._compiled, ckey, compiled)
+        return compiled
+
+    # --------------------------------------------------------------- stats --
+    def stats(self) -> SessionStats:
+        cs = self.cache.stats
+        return SessionStats(
+            compiles=self._compiles,
+            compiles_cached=self._compiles_cached,
+            frontend_runs=self._frontend_runs,
+            frontend_served=self._frontend_served,
+            cache_hits=cs.hits,
+            cache_misses=cs.misses,
+            cache_evictions=cs.evictions,
+            cache_entries=len(self.cache),
+            cache_nbytes=self.cache.nbytes(),
+        )

@@ -1,0 +1,108 @@
+"""ExecutorSpec: the one declaration of *how* HGNN work should execute.
+
+PRs 1-3 grew the execution surface one knob at a time, and each knob
+landed in a different place: ``PipelineConfig(pack=...)`` on the frontend,
+``na_backend=``/``kernel_backend=`` strings on ``HGNN.apply``/``loss``,
+and ``FrontendResult.batches()`` vs ``banded_batches()`` on the caller.
+Nothing tied them together, so it was easy to pack twice, or hand a
+``BandedBatch`` list to the jnp executor.
+
+``ExecutorSpec`` replaces the scattered strings and booleans with one
+frozen, hashable declaration, validated at construction:
+
+  * ``banded`` implies packing — ``pack=False`` with the banded executor
+    is rejected, and the default (``pack=None``) resolves to whatever the
+    executor needs;
+  * the banded NA path runs kernels only, so ``kernel_backend="jnp"``
+    (legal for the SGB device composer) is rejected with it;
+  * the banded layout IS the restructurer's schedule, so
+    ``restructure=False`` is rejected with it.
+
+``repro.api.Session`` consumes the spec and owns the rest: callers never
+see the pack flag or the batch flavor again.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.pipeline.frontend import PipelineConfig
+
+_PLANNERS = ("naive", "ctt", "ctt_cache", "ctt_dp")
+_SGB_BACKENDS = ("host", "device")
+_NA_EXECUTORS = ("jnp", "banded")
+_KERNEL_BACKENDS = ("interpret", "pallas", "jnp")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorSpec:
+    """How to plan, build, and execute — everything but the workload.
+
+    ``kernel_backend`` is shared by the two kernel consumers: the SGB
+    device composer (``interpret`` | ``pallas`` | ``jnp``) and the banded
+    NA executor (``interpret`` | ``pallas`` — kernels only, validated).
+    ``pack=None`` means "whatever ``na_executor`` needs" and is resolved
+    to a concrete bool at construction, so a constructed spec always
+    states its packing policy.
+    """
+
+    planner: str = "ctt"
+    sgb_backend: str = "host"
+    na_executor: str = "jnp"
+    kernel_backend: str = "interpret"
+    restructure: bool = True
+    degree_order: bool = True
+    affinity: str = "barycenter"
+    pack: Optional[bool] = None
+
+    def __post_init__(self):
+        for field, value, legal in (
+            ("planner", self.planner, _PLANNERS),
+            ("sgb_backend", self.sgb_backend, _SGB_BACKENDS),
+            ("na_executor", self.na_executor, _NA_EXECUTORS),
+            ("kernel_backend", self.kernel_backend, _KERNEL_BACKENDS),
+        ):
+            if value not in legal:
+                raise ValueError(
+                    f"ExecutorSpec.{field}={value!r} not in {legal}")
+        if self.na_executor == "banded":
+            if self.pack is False:
+                raise ValueError(
+                    "na_executor='banded' implies packing: the banded NA "
+                    "kernels consume PackedEdges blocks (pack=False would "
+                    "silently re-pack per model)")
+            if not self.restructure:
+                raise ValueError(
+                    "na_executor='banded' requires restructure=True (the "
+                    "banded layout is the restructurer's schedule)")
+            if self.kernel_backend == "jnp":
+                raise ValueError(
+                    "na_executor='banded' runs kernels only: "
+                    "kernel_backend must be 'interpret' or 'pallas' "
+                    "('jnp' is an SGB-composer-only backend)")
+        if self.pack and not self.restructure:
+            raise ValueError(
+                "pack=True requires restructure=True (PackedEdges blocks "
+                "are built from the restructured schedule)")
+        if self.pack is None:
+            object.__setattr__(self, "pack", self.na_executor == "banded")
+
+    @property
+    def na_kernel_backend(self) -> str:
+        """The kernel backend the NA executor consumes.  ``"jnp"`` is an
+        SGB-composer-only value (``HGNN.execute`` rejects it), so the NA
+        side of such a spec falls back to the interpret kernels."""
+        return "interpret" if self.kernel_backend == "jnp" else self.kernel_backend
+
+    def pipeline_config(self) -> PipelineConfig:
+        """Lower the spec onto the frontend engine's config."""
+        return PipelineConfig(
+            planner=self.planner,
+            backend=self.sgb_backend,
+            kernel_backend=self.kernel_backend,
+            restructure=self.restructure,
+            degree_order=self.degree_order,
+            affinity=self.affinity,
+            renumbered=True,
+            pack=bool(self.pack),
+        )

@@ -14,6 +14,7 @@ Paper §5.3 configuration: hidden 64, layers {3: RGAT, 3: RGCN, 2: S-HGN}.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -30,6 +31,10 @@ from repro.core.hgnn.layers import (
 )
 from repro.hetero.graph import HetGraph, Relation
 from repro.kernels.seg_sum import PackedEdges
+
+# sentinel distinguishing "kwarg not passed" from an explicit value on the
+# deprecated apply/loss shims (explicit backend strings trigger the warning)
+_UNSET = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,8 +89,9 @@ class SemanticGraphBatch:
 class BandedBatch:
     """Device-ready semantic graph in the restructured BANDED layout.
 
-    The sibling of ``SemanticGraphBatch`` consumed by
-    ``HGNN.apply(..., na_backend="banded")``: it carries the pipeline's
+    The sibling of ``SemanticGraphBatch`` consumed by the banded NA
+    executor (``HGNN.execute(..., na_executor="banded")``, bound by
+    ``repro.api.Session.compile``): it carries the pipeline's
     cached ``PackedEdges`` blocks (built once per semantic graph, shared
     across models and layers) plus the gather/scatter permutations that
     move per-layer features into the renumbered banded numbering and NA
@@ -220,17 +226,24 @@ class HGNN:
     def init(self, key: jax.Array) -> Dict:
         return init_params(key, self.cfg, self.feature_dims, self.metapaths)
 
-    def apply(
+    def execute(
         self,
         params: Dict,
         features: Dict[str, jax.Array],
         graphs: List[SemanticGraphBatch],
-        na_backend: str = "jnp",
+        *,
+        na_executor: str = "jnp",
         kernel_backend: str = "interpret",
     ) -> jax.Array:
         """Full GFP stage; returns logits for ``cfg.target_type`` vertices.
 
-        ``na_backend`` selects the NA executor:
+        This is the executor-dispatching implementation behind
+        ``repro.api.CompiledHGNN.forward`` — callers should compile
+        through a ``repro.api.Session``, which binds the batch flavor and
+        these kwargs once from an ``ExecutorSpec`` (the deprecated
+        ``apply`` shim below delegates here).
+
+        ``na_executor`` selects the NA executor:
           * "jnp"    — ``jax.ops.segment_*`` over global edge lists
                        (``graphs`` must be ``SemanticGraphBatch``);
           * "banded" — the Pallas NA kernels over the restructurer's cached
@@ -251,16 +264,16 @@ class HGNN:
         cached ``BandedBatch`` list across every step.
         """
         cfg = self.cfg
-        if na_backend not in ("jnp", "banded"):
-            raise ValueError(f"unknown na_backend {na_backend!r}")
+        if na_executor not in ("jnp", "banded"):
+            raise ValueError(f"unknown na_executor {na_executor!r}")
         if kernel_backend not in ("interpret", "pallas"):
             raise ValueError(f"unknown kernel_backend {kernel_backend!r} "
                              "(the banded path runs kernels only)")
-        banded = na_backend == "banded"
+        banded = na_executor == "banded"
         for g in graphs:
             if banded != isinstance(g, BandedBatch):
                 raise TypeError(
-                    f"na_backend={na_backend!r} needs "
+                    f"na_executor={na_executor!r} needs "
                     f"{'BandedBatch' if banded else 'SemanticGraphBatch'} "
                     f"inputs, got {type(g).__name__} for {g.metapath!r}")
         h: Dict[str, jax.Array] = {}
@@ -321,21 +334,62 @@ class HGNN:
         head = params["head"]
         return h[cfg.target_type] @ head["w"] + head["b"]
 
-    def loss(self, params, features, graphs, labels: jax.Array,
-             mask: Optional[jax.Array] = None, na_backend: str = "jnp",
-             kernel_backend: str = "interpret") -> jax.Array:
+    def execute_loss(self, params, features, graphs, labels: jax.Array,
+                     mask: Optional[jax.Array] = None, *,
+                     na_executor: str = "jnp",
+                     kernel_backend: str = "interpret") -> jax.Array:
         """Masked cross-entropy over ``cfg.target_type`` vertices
         (semi-supervised node classification).  Differentiable on both NA
-        executors: ``jax.grad(m.loss)(..., na_backend="banded")`` matches
-        the jnp backend's gradients to float tolerance."""
-        logits = self.apply(params, features, graphs,
-                            na_backend=na_backend,
-                            kernel_backend=kernel_backend)
+        executors: ``jax.grad`` of this loss on the banded executor
+        matches the jnp executor's gradients to float tolerance."""
+        logits = self.execute(params, features, graphs,
+                              na_executor=na_executor,
+                              kernel_backend=kernel_backend)
         logp = jax.nn.log_softmax(logits)
         nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
         if mask is not None:
             return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
         return jnp.mean(nll)
+
+    # ------------------------------------------------- deprecated surface --
+    def _resolve_deprecated(self, na_backend, kernel_backend, method: str):
+        explicit = [name for name, value in
+                    (("na_backend", na_backend),
+                     ("kernel_backend", kernel_backend))
+                    if value is not _UNSET]
+        if explicit:
+            warnings.warn(
+                f"HGNN.{method}(..., {', '.join(explicit)}=...) is "
+                "deprecated: compile through repro.api.Session "
+                "(ExecutorSpec carries the executor choice) instead of "
+                "threading backend strings per call",
+                DeprecationWarning, stacklevel=3)
+        na = "jnp" if na_backend is _UNSET else na_backend
+        kb = "interpret" if kernel_backend is _UNSET else kernel_backend
+        return na, kb
+
+    def apply(self, params, features, graphs, na_backend=_UNSET,
+              kernel_backend=_UNSET) -> jax.Array:
+        """Deprecated shim over :meth:`execute` — same math, bitwise.
+
+        Passing ``na_backend``/``kernel_backend`` here warns; new code
+        gets a bound, no-kwargs ``forward`` from
+        ``repro.api.Session.compile``.
+        """
+        na, kb = self._resolve_deprecated(na_backend, kernel_backend,
+                                          "apply")
+        return self.execute(params, features, graphs, na_executor=na,
+                            kernel_backend=kb)
+
+    def loss(self, params, features, graphs, labels: jax.Array,
+             mask: Optional[jax.Array] = None, na_backend=_UNSET,
+             kernel_backend=_UNSET) -> jax.Array:
+        """Deprecated shim over :meth:`execute_loss` (see :meth:`apply`)."""
+        na, kb = self._resolve_deprecated(na_backend, kernel_backend,
+                                          "loss")
+        return self.execute_loss(params, features, graphs, labels,
+                                 mask=mask, na_executor=na,
+                                 kernel_backend=kb)
 
 
 def package_batches(
@@ -394,7 +448,7 @@ def graphs_from_pipeline(result) -> List[SemanticGraphBatch]:
 
 
 def banded_graphs_from_pipeline(result) -> List[BandedBatch]:
-    """Banded batches from a ``pipeline.FrontendResult`` for
-    ``HGNN.apply(..., na_backend="banded")`` — one ``PackedEdges`` per
-    semantic graph, shared by every model and layer."""
+    """Banded batches from a ``pipeline.FrontendResult`` for the banded
+    NA executor — one ``PackedEdges`` per semantic graph, shared by every
+    model and layer."""
     return result.banded_batches()

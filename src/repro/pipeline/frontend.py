@@ -15,8 +15,8 @@ calls; this module fuses them into a single cached execution engine:
      banded ``PackedEdges`` blocks for the NA kernel, pre-built with
      ``pack=True`` or on the first ``banded_batches()`` request) built
      once and reused across the multi-model / multi-target scenarios;
-     ``FrontendResult.banded_batches()`` is what
-     ``HGNN.apply(..., na_backend="banded")`` consumes.
+     ``FrontendResult.banded_batches()`` is what the banded NA executor
+     consumes (bound by ``repro.api.Session.compile``).
 
 Everything is keyed by ``HetGraph.fingerprint()`` in a
 ``SemanticGraphCache`` (process-wide by default), so a repeated request —
@@ -99,7 +99,7 @@ class FrontendResult:
 
     def banded_batches(self) -> list:
         """Banded ``BandedBatch`` list for the kernel-executed GFP path
-        (``HGNN.apply(..., na_backend="banded")``) — built once, shared.
+        (the ``na_executor="banded"`` spec) — built once, shared.
 
         Uses the run's cached renumbered ``PackedEdges`` when the config
         packed them (``pack=True`` + ``renumbered=True``); a model

@@ -1,4 +1,7 @@
-"""Serving substrate: KV-cache engine, batched prefill/decode."""
+"""Serving substrate: the LM KV-cache engine (batched prefill/decode) and
+the multi-tenant HGNN engine over compiled ``repro.api`` sessions."""
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.hgnn import HGNNRequest, HGNNResponse, HGNNServeEngine
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request",
+           "HGNNRequest", "HGNNResponse", "HGNNServeEngine"]

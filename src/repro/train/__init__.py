@@ -4,11 +4,17 @@ from repro.train.optim import AdamWState, adamw_init, adamw_update, clip_by_glob
 from repro.train.data import SyntheticTokens
 from repro.train.checkpoint import CheckpointManager
 from repro.train.train_step import build_train_step, TrainState
+# NOTE: the package-level `init_train_state` is the HGNN variant (it
+# returns HGNNTrainState, pairing with make_train_step/fit).  The LM
+# variant that pairs with `build_train_step` lives at
+# repro.train.train_step.init_train_state — import it from there.
+# `init_hgnn_train_state` is the unambiguous alias for new code.
 from repro.train.hgnn_step import (
     HGNNTrainState,
     degree_bucket_labels,
     fit,
     init_train_state,
+    init_train_state as init_hgnn_train_state,
     make_eval_fn,
     make_train_step,
     propagated_feature_labels,
@@ -19,6 +25,7 @@ __all__ = [
     "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
     "SyntheticTokens", "CheckpointManager", "build_train_step", "TrainState",
     "HGNNTrainState", "degree_bucket_labels", "fit", "init_train_state",
+    "init_hgnn_train_state",
     "make_eval_fn", "make_train_step", "propagated_feature_labels",
     "semi_supervised_masks",
 ]

@@ -2,8 +2,11 @@
 
 The banded executor became differentiable in kernels/seg_sum.py and
 kernels/ops.py (custom VJPs over the cached ``PackedEdges``), so the same
-train step runs on ``na_backend="jnp"`` (segment-sum oracle) or
-``na_backend="banded"`` (Pallas NA kernels).  Semantic-graph batches are
+train step runs on the jnp executor (segment-sum oracle) or the banded
+executor (Pallas NA kernels) — pick one by threading a
+``repro.api.ExecutorSpec`` through ``executor=`` (what
+``CompiledHGNN.fit`` does) or via the legacy ``na_backend`` string
+kwargs.  Semantic-graph batches are
 closed over by the step function — they are host-side packings, not
 pytrees — and because every VJP closure is memoized on its packing, a
 jitted step retraces nothing across steps: one ``BandedBatch`` list
@@ -30,6 +33,19 @@ from repro.train.optim import (
     clip_by_global_norm,
     warmup_cosine,
 )
+
+
+def _resolve_executor(
+    executor: Optional[Any], na_backend: str, kernel_backend: str
+) -> Tuple[str, str]:
+    """An executor spec (``repro.api.ExecutorSpec``, duck-typed so this
+    module stays import-independent of the api layer) wins over the
+    legacy string kwargs.  The NA-facing kernel backend is used when the
+    spec exposes one (``kernel_backend="jnp"`` is SGB-composer-only)."""
+    if executor is not None:
+        kb = getattr(executor, "na_kernel_backend", executor.kernel_backend)
+        return executor.na_executor, kb
+    return na_backend, kernel_backend
 
 
 @jax.tree_util.register_dataclass
@@ -142,24 +158,30 @@ def make_train_step(
     clip_norm: Optional[float] = None,
     na_backend: str = "jnp",
     kernel_backend: str = "interpret",
+    executor: Optional[Any] = None,
 ) -> Callable[..., Tuple[HGNNTrainState, jax.Array]]:
     """Build the jitted train step ``(state, features, labels, mask) ->
     (state, loss)`` for one (model, graphs, executor) combination.
 
-    ``graphs`` must match ``na_backend`` (``SemanticGraphBatch`` for
-    "jnp", ``BandedBatch`` for "banded") — ``HGNN.apply`` validates.
+    ``executor`` — anything with ``na_executor``/``kernel_backend``
+    attributes, i.e. a ``repro.api.ExecutorSpec`` — overrides the two
+    string kwargs; ``repro.api.CompiledHGNN.fit`` threads the session's
+    spec through it so compiled models train with no backend strings.
+    ``graphs`` must match the executor (``SemanticGraphBatch`` for
+    "jnp", ``BandedBatch`` for "banded") — ``HGNN.execute`` validates.
     """
+    na_backend, kernel_backend = _resolve_executor(executor, na_backend, kernel_backend)
     lr_fn = warmup_cosine(lr, warmup=warmup, total=total)
 
     def step(state: HGNNTrainState, features, labels, mask):
         def loss_fn(p):
-            return model.loss(
+            return model.execute_loss(
                 p,
                 features,
                 graphs,
                 labels,
                 mask=mask,
-                na_backend=na_backend,
+                na_executor=na_backend,
                 kernel_backend=kernel_backend,
             )
 
@@ -184,15 +206,17 @@ def make_eval_fn(
     *,
     na_backend: str = "jnp",
     kernel_backend: str = "interpret",
+    executor: Optional[Any] = None,
 ) -> Callable[..., jax.Array]:
     """Jitted masked accuracy ``(params, features, labels, mask) -> ()``."""
+    na_backend, kernel_backend = _resolve_executor(executor, na_backend, kernel_backend)
 
     def accuracy(params, features, labels, mask):
-        logits = model.apply(
+        logits = model.execute(
             params,
             features,
             graphs,
-            na_backend=na_backend,
+            na_executor=na_backend,
             kernel_backend=kernel_backend,
         )
         hit = (logits.argmax(-1) == labels).astype(jnp.float32)
@@ -214,6 +238,7 @@ def fit(
     weight_decay: float = 0.0,
     na_backend: str = "jnp",
     kernel_backend: str = "interpret",
+    executor: Optional[Any] = None,
     epoch_callback: Optional[Callable[[int, float], None]] = None,
 ) -> Dict[str, Any]:
     """Full-graph training loop; returns final state + metric history.
@@ -221,8 +246,11 @@ def fit(
     One epoch is one full-graph step (the standard semi-supervised
     setting).  ``epoch_callback(epoch, loss)`` lets callers time or log
     per-epoch without re-implementing the loop (``benchmarks/train_bench``
-    uses it for the latency trajectory).
+    uses it for the latency trajectory).  Prefer reaching this through
+    ``repro.api.CompiledHGNN.fit``, which binds ``executor`` to the
+    session's spec.
     """
+    na_backend, kernel_backend = _resolve_executor(executor, na_backend, kernel_backend)
     state = init_train_state(model, jax.random.key(seed))
     step = make_train_step(
         model,

@@ -151,3 +151,60 @@ def test_invalid_metapath_rejected(acm_small):
     pipe = FrontendPipeline(cache=SemanticGraphCache())
     with pytest.raises(ValueError):
         pipe.run(acm_small, ["APX"])
+
+
+# ------------------------------------------------------- cache eviction --
+def _rel(tag: str):
+    """A tiny distinct Relation payload per tag (content is irrelevant to
+    the cache; identity lets the tests track who survived)."""
+    from repro.hetero.graph import Relation
+
+    return Relation.from_edges("A", "P", 4, 4,
+                               np.array([len(tag) % 4]), np.array([0]))
+
+
+def test_cache_lru_evicts_least_recently_used():
+    cache = SemanticGraphCache(max_entries=2)
+    cache.put_relation("fp", "APA", _rel("APA"))
+    cache.put_relation("fp", "PAP", _rel("PAP"))
+    # touch APA so PAP becomes the LRU entry, then overflow
+    assert cache.get_relation("fp", "APA") is not None
+    cache.put_relation("fp", "PSP", _rel("PSP"))
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+    assert cache.get_relation("fp", "PAP") is None  # evicted (LRU)
+    assert cache.get_relation("fp", "APA") is not None  # kept (recent)
+    assert cache.get_relation("fp", "PSP") is not None
+
+
+def test_cache_put_of_existing_key_does_not_evict():
+    cache = SemanticGraphCache(max_entries=2)
+    cache.put_relation("fp", "APA", _rel("APA"))
+    cache.put_relation("fp", "PAP", _rel("PAP"))
+    cache.put_relation("fp", "APA", _rel("APA2"))  # refresh, not overflow
+    assert len(cache) == 2 and cache.stats.evictions == 0
+
+
+def test_cache_hit_rate_correct_under_eviction():
+    """hit_rate keeps counting evicted keys as misses: a thrashing
+    working set over a too-small cache converges to ~0, and the counters
+    reconcile exactly."""
+    cache = SemanticGraphCache(max_entries=1)
+    keys = ["APA", "PAP"]
+    for i in range(6):  # alternating keys always miss a 1-entry cache
+        mp = keys[i % 2]
+        assert cache.get_relation("fp", mp) is None
+        cache.put_relation("fp", mp, _rel(mp))
+    st = cache.stats
+    assert (st.hits, st.misses, st.evictions) == (0, 6, 5)
+    assert st.hit_rate == 0.0
+    # one repeated get against the resident entry moves the rate
+    assert cache.get_relation("fp", keys[1]) is not None
+    assert cache.stats.hit_rate == pytest.approx(1 / 7)
+
+
+def test_cache_unbounded_when_max_entries_none():
+    cache = SemanticGraphCache(max_entries=None)
+    for i in range(64):
+        cache.put_relation("fp", f"M{i}", _rel(str(i)))
+    assert len(cache) == 64 and cache.stats.evictions == 0
