@@ -9,11 +9,15 @@ Reports, per dataset/workload:
   * ``warm``         — the repeated request served from the semantic-graph
                        cache (the multi-model / multi-target scenario);
   * the cached-request speedup over the cold build (the pipeline's win);
-  * ``serve``        — the multi-tenant ``HGNNServeEngine`` over one
+  * ``serve``        — the async multi-tenant ``HGNNServeEngine`` over one
                        ``repro.api.Session``: several graphs registered,
-                       queued requests batched through compiled forwards,
-                       per-request p50 latency and the session's
-                       warm-cache hit-rate.
+                       queued requests batched through compiled forwards.
+                       Reports the same queue served through the
+                       full-graph forward vs the node-subset micro-batch
+                       path (``subset_threshold``), per-request p50
+                       latency with its queueing-vs-compute split, an
+                       async (background admission loop) round, and the
+                       session's warm-cache hit-rate.
 
 Run:  PYTHONPATH=src:. python benchmarks/pipeline_bench.py [scale]
 """
@@ -26,7 +30,7 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import row
-from repro.api import ExecutorSpec, Session
+from repro.api import ExecutorSpec, ServePolicy, Session
 from repro.core.hgnn import HGNNConfig
 from repro.pipeline import FrontendPipeline, PipelineConfig, SemanticGraphCache
 from repro.serve import HGNNRequest, HGNNServeEngine
@@ -100,37 +104,97 @@ SERVE_TENANTS = [
 SERVE_REQUESTS = 24
 
 
-def bench_serving(scale: float = 0.25) -> List[str]:
-    """Multi-tenant serving: >= 2 graphs on one engine, batched requests."""
+def _make_engine(session: Session, policy: ServePolicy,
+                 scale: float) -> HGNNServeEngine:
     from repro.pipeline.frontend import _dataset
 
-    out = []
-    engine = HGNNServeEngine(session=Session(ExecutorSpec()))
+    engine = HGNNServeEngine(session=session, policy=policy)
     for name, ds, targets, target_type, model in SERVE_TENANTS:
         graph = _dataset(ds, 0, float(scale))
         engine.register(name, graph, targets, HGNNConfig(
             model=model, hidden=64, num_layers=2, num_classes=3,
             target_type=target_type))
+    return engine
+
+
+def _requests():
     rng = np.random.default_rng(0)
     names = [t[0] for t in SERVE_TENANTS]
-    engine.submit([
+    return [
         HGNNRequest(i, names[i % len(names)],
                     nodes=rng.integers(0, 16, size=8))
         for i in range(SERVE_REQUESTS)
-    ])
+    ]
+
+
+def bench_serving(scale: float = 0.25) -> List[str]:
+    """Async multi-tenant serving: >= 2 graphs on one engine.
+
+    The same 24-request queue is served three ways: through the
+    full-graph forward (``subset_threshold=0``), through the node-subset
+    micro-batch path (union of each group's requested ids gathered
+    through the classifier head), and through the background admission
+    loop (futures).  Every engine shares one Session, so registrations
+    after the first are warm-cache hits.
+    """
+    out = []
+    session = Session(ExecutorSpec())
+
+    # --- full-graph forward for every group (subset path disabled) ---
+    eng_full = _make_engine(session, ServePolicy(subset_threshold=0.0),
+                            scale)
+    eng_full.submit(_requests())
     t0 = time.perf_counter()
-    responses = engine.step()
-    wall_us = (time.perf_counter() - t0) * 1e6
+    responses = eng_full.step()
+    full_us = (time.perf_counter() - t0) * 1e6
     assert len(responses) == SERVE_REQUESTS
-    s = engine.stats()
+    s = eng_full.stats()
     out.append(row(
-        "serve/batch", wall_us,
-        f"requests={s['requests_served']};forwards={s['forwards']};"
+        "serve/full_batch", full_us,
+        f"requests={s['requests_served']};forwards={s['forwards_full']};"
         f"batching={s['batching_factor']:.1f}"))
+
+    # --- node-subset micro-batching (one warm round compiles the
+    # bucketed subset forwards; the timed round is the steady state) ---
+    eng_sub = _make_engine(session, ServePolicy(subset_threshold=0.5),
+                           scale)
+    eng_sub.submit(_requests())
+    eng_sub.step()  # warm: traces one subset bucket per tenant
+    eng_sub.submit(_requests())
+    t0 = time.perf_counter()
+    responses = eng_sub.step()
+    sub_us = (time.perf_counter() - t0) * 1e6
+    assert all(r.mode == "subset" for r in responses)
+    s = eng_sub.stats()
     out.append(row(
-        "serve/request_p50", s["latency_us_p50"],
-        f"p95={s['latency_us_p95']:.0f};"
+        "serve/subset_batch", sub_us,
+        f"forwards={s['forwards_subset']};"
+        f"vs_full={full_us / max(sub_us, 1e-9):.2f}x"))
+    lat = [r.latency_us for r in responses]  # timed round only, no compile
+    out.append(row(
+        "serve/request_p50", float(np.percentile(lat, 50)),
+        f"p95={np.percentile(lat, 95):.0f};"
+        f"queue_p50={np.percentile([r.queue_us for r in responses], 50):.0f};"
+        f"compute_p50={np.percentile([r.compute_us for r in responses], 50):.0f};"
         f"warm_cache_hit_rate={s['session'].hit_rate:.2f}"))
+
+    # --- async admission loop: submit returns futures immediately; the
+    # background thread batches and serves (queue share now includes the
+    # wait for the loop to pick the work up) ---
+    forwards_before = eng_sub.stats()["forwards"]
+    eng_sub.run()
+    t0 = time.perf_counter()
+    futures = eng_sub.submit(_requests())
+    responses = [f.result(timeout=600) for f in futures]
+    async_us = (time.perf_counter() - t0) * 1e6
+    eng_sub.stop()
+    forwards = eng_sub.stats()["forwards"] - forwards_before
+    q_p50 = float(np.percentile([r.queue_us for r in responses], 50))
+    c_p50 = float(np.percentile([r.compute_us for r in responses], 50))
+    out.append(row(
+        "serve/async_batch", async_us,
+        f"queue_p50={q_p50:.0f};compute_p50={c_p50:.0f};"
+        f"batching={len(responses) / max(1, forwards):.1f}"))
     return out
 
 

@@ -11,7 +11,7 @@ import sys
 
 import numpy as np
 
-from repro.api import ExecutorSpec, Session, device_features
+from repro.api import ExecutorSpec, ServePolicy, Session, device_features
 from repro.core.hgnn import HGNNConfig
 from repro.hetero import make_dataset
 from repro.serve import HGNNRequest, HGNNServeEngine
@@ -51,23 +51,44 @@ print(f"warm compile: frontend ran {st.frontend_runs}x, "
       f"served {st.frontend_served}x from the session "
       f"(one PackedEdges/batch set shared by both models)")
 
-# 5) multi-tenant serving: register >1 graph on one engine; queued
-# requests batch through one compiled forward per graph fingerprint
+# 5) async multi-tenant serving: register >1 graph on one engine, start
+# the background admission loop, and submit — futures resolve as the loop
+# batches each graph's queued requests through one compiled forward
+# (node-subset micro-batch when coverage is small, full-graph otherwise)
 imdb = make_dataset("IMDB", scale=scale)
-engine = HGNNServeEngine(session=sess)
+engine = HGNNServeEngine(session=sess, policy=ServePolicy(
+    subset_threshold=0.5, max_queue=256))
 engine.register("acm", g, targets, shgn.cfg)
 engine.register("imdb", imdb, ["AMA", "MAM", "MKM"], HGNNConfig(
     model="rgat", hidden=64, num_layers=2, num_classes=3, target_type="M"))
-engine.submit([
-    HGNNRequest(0, "acm", nodes=np.arange(8)),
-    HGNNRequest(1, "imdb", nodes=np.arange(4)),
-    HGNNRequest(2, "acm"),  # nodes=None: every target vertex
-])
-for r in engine.step():
-    print(f"served rid={r.rid} graph={r.graph} logits={r.logits.shape} "
+engine.run()  # submit() now returns immediately; a daemon thread serves
+responses = [f.result(timeout=120) for f in engine.submit([
+    HGNNRequest(0, "acm", nodes=np.arange(8)),   # subset micro-batch
+    HGNNRequest(1, "imdb", nodes=np.arange(4)),  # subset micro-batch
+])]
+# a nodes=None request asks for every target vertex, so its group takes
+# the full-graph forward instead of the subset path
+responses.append(engine.submit(HGNNRequest(2, "acm")).result(timeout=120))
+for r in responses:
+    print(f"served rid={r.rid} graph={r.graph} mode={r.mode} "
+          f"logits={r.logits.shape} v{r.params_version} "
           f"latency={r.latency_us / 1e3:.1f} ms "
-          f"(batched with {r.batched_with})")
+          f"(queue {r.queue_us / 1e3:.1f} + compute "
+          f"{r.compute_us / 1e3:.1f}; batched with {r.batched_with})")
+
+# 6) parameter hot-swap: install freshly trained params into the live
+# registration; the version stamps every later response
+v = engine.swap_params("acm", shgn.init(1))
+r = engine.submit(HGNNRequest(3, "acm", nodes=np.arange(8))).result(
+    timeout=120)
+print(f"hot-swap: registration now v{v}, response served by "
+      f"v{r.params_version}")
+engine.stop()
+
 s = engine.stats()
 print(f"serve: batching_factor={s['batching_factor']:.1f} "
-      f"p50={s['latency_us_p50'] / 1e3:.1f} ms over "
+      f"forwards={s['forwards_full']} full + {s['forwards_subset']} subset, "
+      f"p50={s['latency_us_p50'] / 1e3:.1f} ms "
+      f"(queue p50 {s['queue_us_p50'] / 1e3:.1f} ms, compute p50 "
+      f"{s['compute_us_p50'] / 1e3:.1f} ms) over "
       f"{s['graphs_registered']} graphs")

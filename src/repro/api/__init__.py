@@ -8,13 +8,15 @@ a ``CompiledHGNN`` that runs with no backend kwargs.  See
 on top.
 """
 from repro.api.session import (CompiledHGNN, Session, SessionStats,
-                               device_features)
-from repro.api.spec import ExecutorSpec
+                               canonical_node_ids, device_features)
+from repro.api.spec import ExecutorSpec, ServePolicy
 
 __all__ = [
     "CompiledHGNN",
     "ExecutorSpec",
+    "ServePolicy",
     "Session",
     "SessionStats",
+    "canonical_node_ids",
     "device_features",
 ]

@@ -21,11 +21,13 @@ that prove it.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.spec import ExecutorSpec
 from repro.core.hgnn.models import HGNN, HGNNConfig
@@ -34,9 +36,44 @@ from repro.pipeline.cache import SemanticGraphCache
 from repro.pipeline.frontend import FrontendPipeline, FrontendResult
 
 
+def canonical_node_ids(node_ids, num_target: int, *,
+                       ctx: str = "node_ids") -> "np.ndarray":
+    """Validate target-vertex ids (integer dtype, 1-D, non-empty, within
+    ``[0, num_target)``) and return them as a canonical int32 array.
+
+    The one validator shared by ``CompiledHGNN.forward_subset`` and the
+    serving engine's admission path (``ctx`` prefixes the error message,
+    e.g. ``"request 3: nodes"``), so the two surfaces cannot drift.
+
+    Example::
+
+        ids = canonical_node_ids([4, 7], compiled.num_target)
+    """
+    arr = np.asarray(node_ids)
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise TypeError(
+            f"{ctx} must be an integer array, got dtype {arr.dtype}")
+    if arr.ndim != 1 or arr.size == 0:
+        raise ValueError(
+            f"{ctx} must be a non-empty 1-D id array, got shape "
+            f"{arr.shape}")
+    lo, hi = int(arr.min()), int(arr.max())
+    if lo < 0 or hi >= num_target:
+        raise ValueError(
+            f"{ctx}: id {lo if lo < 0 else hi} out of bounds "
+            f"(valid range [0, {num_target}))")
+    return arr.astype(np.int32, copy=False)
+
+
 def device_features(graph: HetGraph) -> Dict[str, jax.Array]:
     """Upload a HetGraph's raw feature dict to device arrays (the form
-    every compiled entry point takes)."""
+    every compiled entry point takes).
+
+    Example::
+
+        feats = device_features(graph)          # {"P": (N_P, d_P), ...}
+        logits = compiled.forward(params, feats)
+    """
     return {t: jnp.asarray(x) for t, x in graph.features.items()}
 
 
@@ -63,6 +100,7 @@ class SessionStats:
 
     @property
     def hit_rate(self) -> float:
+        """Cache hits over total lookups (e.g. ``stats.hit_rate > 0.3``)."""
         return self.cache_hits / max(1, self.cache_hits + self.cache_misses)
 
 
@@ -86,12 +124,20 @@ class CompiledHGNN:
         self.graphs = graphs
         self.fingerprint = fingerprint
         self._forward = None
+        self._forward_subset = None
+        self._subset_traces = 0
+        # guards every lazy jit build: two threads racing the first call
+        # must not each build (and trace) their own jitted function, or
+        # compile work doubles and the no-retrace compile-count guard
+        # (subset_traces) breaks
+        self._build_lock = threading.Lock()
         self._loss = None
         self._accuracy = None
 
     # ------------------------------------------------------- conveniences --
     @property
     def cfg(self) -> HGNNConfig:
+        """The bound model's ``HGNNConfig`` (e.g. ``compiled.cfg.model``)."""
         return self.model.cfg
 
     @property
@@ -112,32 +158,112 @@ class CompiledHGNN:
         return self.model.init(key)
 
     def forward(self, params, features) -> jax.Array:
-        """Logits for ``cfg.target_type`` vertices (jitted, no kwargs)."""
+        """Logits for every ``cfg.target_type`` vertex (jitted, no kwargs).
+
+        Example::
+
+            logits = compiled.forward(params, device_features(graph))
+            assert logits.shape == (compiled.num_target, cfg.num_classes)
+        """
         if self._forward is None:
-            spec = self.spec
+            with self._build_lock:
+                if self._forward is None:
+                    spec = self.spec
 
-            def fwd(p, f):
-                return self.model.execute(
-                    p, f, self.graphs, na_executor=spec.na_executor,
-                    kernel_backend=spec.na_kernel_backend)
+                    def fwd(p, f):
+                        return self.model.execute(
+                            p, f, self.graphs,
+                            na_executor=spec.na_executor,
+                            kernel_backend=spec.na_kernel_backend)
 
-            self._forward = jax.jit(fwd)
+                    self._forward = jax.jit(fwd)
         return self._forward(params, features)
+
+    @property
+    def subset_traces(self) -> int:
+        """How many times :meth:`forward_subset` has (re)traced — stable
+        across resubmissions that land in the same id bucket, so callers
+        (and tests) can assert the serving hot path never recompiles::
+
+            before = compiled.subset_traces
+            compiled.forward_subset(params, feats, ids_a)
+            compiled.forward_subset(params, feats, ids_b)  # same bucket
+            assert compiled.subset_traces == before + 1
+        """
+        return self._subset_traces
+
+    def forward_subset(self, params, features, node_ids,
+                       *, bucket_min: int = 8,
+                       validate: bool = True) -> jax.Array:
+        """Logits for an explicit subset of target vertices (jitted).
+
+        Message passing still runs full-graph — a vertex's logits depend
+        on its whole receptive field — but only the requested rows of the
+        final hidden state are gathered through the classifier head, so a
+        micro-batch of node-subset requests skips the full-head matmul
+        and the full-logits device->host transfer.  Row ``i`` of the
+        result is bitwise-equal to row ``node_ids[i]`` of
+        :meth:`forward` under the same trace.
+
+        ``node_ids`` is padded to the next power-of-two bucket (at least
+        ``bucket_min``) before entering the jitted function, so repeated
+        calls with different ids — the serving engine's resubmission
+        pattern — only retrace when the bucket grows, never per request
+        (see :attr:`subset_traces`).
+
+        ``validate=False`` skips the id re-validation for callers that
+        already canonicalized through ``canonical_node_ids`` (the serving
+        engine validates at admission; re-scanning the union inside the
+        timed serving window would pay the cost twice).
+
+        Example::
+
+            rows = compiled.forward_subset(params, feats, np.array([4, 7]))
+            assert rows.shape == (2, cfg.num_classes)
+        """
+        if validate:
+            ids = canonical_node_ids(node_ids, self.num_target)
+        else:
+            ids = np.asarray(node_ids)
+        if self._forward_subset is None:
+            with self._build_lock:
+                if self._forward_subset is None:
+                    spec = self.spec
+
+                    def fwd_subset(p, f, padded_ids):
+                        # traced once per bucket shape; the counter
+                        # increments at trace time only, which is what the
+                        # no-retrace guard (subset_traces) observes
+                        self._subset_traces += 1
+                        return self.model.execute_subset(
+                            p, f, self.graphs, padded_ids,
+                            na_executor=spec.na_executor,
+                            kernel_backend=spec.na_kernel_backend)
+
+                    self._forward_subset = jax.jit(fwd_subset)
+        n = int(ids.shape[0])
+        bucket = max(int(bucket_min), 1 << max(0, n - 1).bit_length())
+        padded = np.zeros((bucket,), np.int32)
+        padded[:n] = ids
+        out = self._forward_subset(params, features, jnp.asarray(padded))
+        return out[:n]
 
     def loss(self, params, features, labels, mask=None) -> jax.Array:
         """Masked cross-entropy on the target type (jitted).  ``mask=None``
         means every vertex counts (an all-ones mask keeps the trace
         shape-static across masked and unmasked calls)."""
         if self._loss is None:
-            spec = self.spec
+            with self._build_lock:
+                if self._loss is None:
+                    spec = self.spec
 
-            def loss_fn(p, f, y, m):
-                return self.model.execute_loss(
-                    p, f, self.graphs, y, mask=m,
-                    na_executor=spec.na_executor,
-                    kernel_backend=spec.na_kernel_backend)
+                    def loss_fn(p, f, y, m):
+                        return self.model.execute_loss(
+                            p, f, self.graphs, y, mask=m,
+                            na_executor=spec.na_executor,
+                            kernel_backend=spec.na_kernel_backend)
 
-            self._loss = jax.jit(loss_fn)
+                    self._loss = jax.jit(loss_fn)
         if mask is None:
             mask = jnp.ones((self.num_target,), jnp.float32)
         return self._loss(params, features, labels, mask)
@@ -147,10 +273,12 @@ class CompiledHGNN:
         train substrate's eval fn so the compiled and training paths share
         one accuracy definition)."""
         if self._accuracy is None:
-            from repro.train.hgnn_step import make_eval_fn
+            with self._build_lock:
+                if self._accuracy is None:
+                    from repro.train.hgnn_step import make_eval_fn
 
-            self._accuracy = make_eval_fn(self.model, self.graphs,
-                                          executor=self.spec)
+                    self._accuracy = make_eval_fn(self.model, self.graphs,
+                                                  executor=self.spec)
         if mask is None:
             mask = jnp.ones((self.num_target,), jnp.float32)
         return self._accuracy(params, features, labels, mask)
@@ -257,6 +385,13 @@ class Session:
 
     # --------------------------------------------------------------- stats --
     def stats(self) -> SessionStats:
+        """Snapshot of the session's reuse counters (see ``SessionStats``).
+
+        Example::
+
+            sess.compile(g, targets, cfg); sess.compile(g, targets, cfg)
+            assert sess.stats().compiles_cached == 1
+        """
         cs = self.cache.stats
         return SessionStats(
             compiles=self._compiles,

@@ -95,7 +95,12 @@ class ExecutorSpec:
         return "interpret" if self.kernel_backend == "jnp" else self.kernel_backend
 
     def pipeline_config(self) -> PipelineConfig:
-        """Lower the spec onto the frontend engine's config."""
+        """Lower the spec onto the frontend engine's config.
+
+        Example::
+
+            ExecutorSpec(na_executor="banded").pipeline_config().pack  # True
+        """
         return PipelineConfig(
             planner=self.planner,
             backend=self.sgb_backend,
@@ -106,3 +111,57 @@ class ExecutorSpec:
             renumbered=True,
             pack=bool(self.pack),
         )
+
+
+_BACKPRESSURE = ("block", "reject")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePolicy:
+    """How ``repro.serve.HGNNServeEngine`` admits and batches requests —
+    the serving sibling of :class:`ExecutorSpec` (*how to serve*, while
+    the spec says *how to execute*).
+
+    ``subset_threshold`` — when every queued request for a registration
+    names explicit node ids and their union covers at most this fraction
+    of the target vertices, the engine serves the group through one
+    compiled *subset forward* (``CompiledHGNN.forward_subset``: full
+    message passing, head + host transfer only over the union) instead of
+    the full-graph forward.  ``0.0`` disables subset serving; ``1.0``
+    always takes it when every request is explicit.
+
+    ``bucket_min`` — smallest padded id-buffer bucket for the subset
+    forward (buckets are powers of two, so resubmissions retrace only
+    when the union outgrows the largest bucket seen).
+
+    ``max_queue`` / ``backpressure`` — the admission queue bound and what
+    ``submit`` does when it is full: ``"block"`` waits for the serving
+    loop to drain capacity, ``"reject"`` raises ``AdmissionError``
+    immediately (shed load at the edge).
+
+    Example::
+
+        engine = HGNNServeEngine(
+            spec=ExecutorSpec(),
+            policy=ServePolicy(subset_threshold=0.25, max_queue=256,
+                               backpressure="reject"))
+    """
+
+    subset_threshold: float = 0.5
+    bucket_min: int = 8
+    max_queue: int = 1024
+    backpressure: str = "block"
+
+    def __post_init__(self):
+        """Validate every knob at construction (fail fast, like the spec)."""
+        if not 0.0 <= self.subset_threshold <= 1.0:
+            raise ValueError(
+                f"subset_threshold must be in [0, 1], got "
+                f"{self.subset_threshold}")
+        if self.bucket_min < 1:
+            raise ValueError(f"bucket_min must be >= 1, got {self.bucket_min}")
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.backpressure not in _BACKPRESSURE:
+            raise ValueError(
+                f"backpressure={self.backpressure!r} not in {_BACKPRESSURE}")

@@ -226,7 +226,7 @@ class HGNN:
     def init(self, key: jax.Array) -> Dict:
         return init_params(key, self.cfg, self.feature_dims, self.metapaths)
 
-    def execute(
+    def hidden_states(
         self,
         params: Dict,
         features: Dict[str, jax.Array],
@@ -234,14 +234,15 @@ class HGNN:
         *,
         na_executor: str = "jnp",
         kernel_backend: str = "interpret",
-    ) -> jax.Array:
-        """Full GFP stage; returns logits for ``cfg.target_type`` vertices.
+    ) -> Dict[str, jax.Array]:
+        """Run every FP -> NA -> SF layer; returns the final per-type
+        hidden states (global vertex numbering), pre-classifier-head.
 
-        This is the executor-dispatching implementation behind
-        ``repro.api.CompiledHGNN.forward`` — callers should compile
-        through a ``repro.api.Session``, which binds the batch flavor and
-        these kwargs once from an ``ExecutorSpec`` (the deprecated
-        ``apply`` shim below delegates here).
+        This is the shared body of :meth:`execute` (full head) and
+        :meth:`execute_subset` (head over a gathered row subset): message
+        passing is always full-graph — a target vertex's logits depend on
+        its whole receptive field — so the two entry points differ only in
+        which target rows go through the head.
 
         ``na_executor`` selects the NA executor:
           * "jnp"    — ``jax.ops.segment_*`` over global edge lists
@@ -331,8 +332,61 @@ class HGNN:
                     h_next[t] = self_z
             h = {t: jax.nn.relu(v) for t, v in h_next.items()}
 
+        return h
+
+    def execute(
+        self,
+        params: Dict,
+        features: Dict[str, jax.Array],
+        graphs: List[SemanticGraphBatch],
+        *,
+        na_executor: str = "jnp",
+        kernel_backend: str = "interpret",
+    ) -> jax.Array:
+        """Full GFP stage; returns logits for ``cfg.target_type`` vertices.
+
+        This is the executor-dispatching implementation behind
+        ``repro.api.CompiledHGNN.forward`` — callers should compile
+        through a ``repro.api.Session``, which binds the batch flavor and
+        these kwargs once from an ``ExecutorSpec`` (the deprecated
+        ``apply`` shim below delegates here).  See :meth:`hidden_states`
+        for the executor semantics (``na_executor``/``kernel_backend``)
+        and differentiability notes shared with :meth:`execute_subset`.
+        """
+        h = self.hidden_states(params, features, graphs,
+                               na_executor=na_executor,
+                               kernel_backend=kernel_backend)
         head = params["head"]
-        return h[cfg.target_type] @ head["w"] + head["b"]
+        return h[self.cfg.target_type] @ head["w"] + head["b"]
+
+    def execute_subset(
+        self,
+        params: Dict,
+        features: Dict[str, jax.Array],
+        graphs: List[SemanticGraphBatch],
+        node_ids: jax.Array,
+        *,
+        na_executor: str = "jnp",
+        kernel_backend: str = "interpret",
+    ) -> jax.Array:
+        """Logits for an explicit subset of ``cfg.target_type`` vertices.
+
+        Message passing runs full-graph (a target vertex's receptive
+        field spans the whole topology), but only the ``node_ids`` rows of
+        the final hidden state are gathered through the classifier head —
+        the serving micro-batch path, where a queue of small node-subset
+        requests unions into one ``node_ids`` buffer
+        (``repro.api.CompiledHGNN.forward_subset`` wraps this with a
+        padded/bucketed id buffer so resubmissions never retrace).
+        Row ``i`` of the result equals row ``node_ids[i]`` of
+        :meth:`execute` under the same trace.
+        """
+        h = self.hidden_states(params, features, graphs,
+                               na_executor=na_executor,
+                               kernel_backend=kernel_backend)
+        head = params["head"]
+        rows = h[self.cfg.target_type][node_ids]
+        return rows @ head["w"] + head["b"]
 
     def execute_loss(self, params, features, graphs, labels: jax.Array,
                      mask: Optional[jax.Array] = None, *,

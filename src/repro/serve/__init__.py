@@ -1,7 +1,9 @@
 """Serving substrate: the LM KV-cache engine (batched prefill/decode) and
-the multi-tenant HGNN engine over compiled ``repro.api`` sessions."""
+the async multi-tenant HGNN engine over compiled ``repro.api`` sessions."""
 from repro.serve.engine import ServeEngine, Request
-from repro.serve.hgnn import HGNNRequest, HGNNResponse, HGNNServeEngine
+from repro.serve.hgnn import (AdmissionError, HGNNRequest, HGNNResponse,
+                              HGNNServeEngine)
 
 __all__ = ["ServeEngine", "Request",
-           "HGNNRequest", "HGNNResponse", "HGNNServeEngine"]
+           "AdmissionError", "HGNNRequest", "HGNNResponse",
+           "HGNNServeEngine"]

@@ -25,6 +25,14 @@ from repro.models.lm import LM
 
 @dataclasses.dataclass
 class Request:
+    """One LM generation request: a prompt and a new-token budget.
+
+    Example::
+
+        eng.run([Request(rid=0, prompt=np.array([1, 2, 3], np.int32),
+                         max_new=8)])
+    """
+
     rid: int
     prompt: np.ndarray  # (P,) int32
     max_new: int = 16
@@ -37,6 +45,14 @@ def _prefix_group_order(requests: List[Request], depth: int = 8) -> List[Request
 
 
 class ServeEngine:
+    """Continuous-batching LM decode over a fixed-capacity slot batch.
+
+    Example::
+
+        eng = ServeEngine(model, params, batch_slots=2, max_len=64)
+        done = eng.run(requests)      # {rid: [generated token ids]}
+    """
+
     def __init__(self, model: LM, params, batch_slots: int, max_len: int,
                  group_prefixes: bool = True):
         self.model = model
@@ -104,6 +120,8 @@ class ServeEngine:
         return out
 
     def run(self, requests: List[Request], max_steps: int = 64) -> Dict[int, List[int]]:
+        """Admit + decode until every request finishes (or ``max_steps``);
+        returns ``{rid: generated tokens}`` (e.g. ``run(reqs)[0]``)."""
         queue = list(requests)
         done: Dict[int, List[int]] = {}
         steps = 0

@@ -1,4 +1,4 @@
-"""Multi-tenant HGNN serving on compiled sessions.
+"""Async multi-tenant HGNN serving on compiled sessions.
 
 GDR-HGNN and HiHGNN (PAPERS.md) frame the accelerator frontend as a
 service shared across models and requests; ``HGNNServeEngine`` is that
@@ -8,34 +8,73 @@ over the same topology reuses the cached semantic graphs, restructure
 permutations, and ``PackedEdges`` — and then submit inference
 ``HGNNRequest``s for target-type vertices.
 
-``step()`` drains the admission queue grouped by graph fingerprint:
-requests against one registration batch through a single compiled
-full-graph forward (the node-classification analogue of continuous
-batching — one forward amortizes over every queued request), and
-same-topology tenants run back-to-back so the session's cached frontend
-products stay hot.  Every response carries its admission-to-completion
-latency; ``stats()`` reports batching factors, latency percentiles, and
-the session's warm-cache hit rate.
+Serving has three layers:
+
+* **Admission** — ``submit()`` validates node ids (dtype/bounds, so a bad
+  request fails at the edge, never mid-batch), stamps the admission time,
+  and enqueues against a bounded queue (``ServePolicy.max_queue``) with a
+  block-or-reject backpressure policy; it returns a future per request
+  immediately.
+* **Batching** — ``step()`` drains the queue grouped by graph
+  fingerprint: requests against one registration batch through a single
+  compiled forward (the node-classification analogue of continuous
+  batching), and when every request in a group names explicit node ids
+  whose union covers at most ``ServePolicy.subset_threshold`` of the
+  target vertices, the group is served by one *subset forward*
+  (``CompiledHGNN.forward_subset`` — full message passing, classifier
+  head and host transfer only over the union of requested rows).
+  Same-topology tenants run back-to-back so the session's cached frontend
+  products stay hot.
+* **The loop** — ``run()`` drives ``step()`` from a background thread so
+  submitters never block on compute; ``stop()`` drains and joins.
+  ``swap_params()`` atomically installs freshly trained parameters into a
+  live registration, bumping a version stamped on every response.
+
+Every response carries its queueing and compute latency separately;
+``stats()`` reports batching factors, subset-vs-full forward counts,
+latency percentiles, and the session's warm-cache hit rate.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from concurrent.futures import Future, InvalidStateError
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.api.session import CompiledHGNN, Session, device_features
-from repro.api.spec import ExecutorSpec
+from repro.api.session import (CompiledHGNN, Session, canonical_node_ids,
+                               device_features)
+from repro.api.spec import ExecutorSpec, ServePolicy
 from repro.core.hgnn.models import HGNNConfig
 from repro.hetero.graph import HetGraph
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``submit`` when the admission queue is full and the
+    engine's ``ServePolicy.backpressure`` is ``"reject"``.
+
+    Example::
+
+        try:
+            engine.submit(req)
+        except AdmissionError:
+            ...  # shed load / retry with backoff
+    """
 
 
 @dataclasses.dataclass
 class HGNNRequest:
     """One inference request: classify ``nodes`` (target-type vertex ids)
-    of a registered graph.  ``nodes=None`` asks for every target vertex."""
+    of a registered graph.  ``nodes=None`` asks for every target vertex.
+
+    Example::
+
+        engine.submit(HGNNRequest(rid=0, graph="acm",
+                                  nodes=np.array([3, 14, 15])))
+    """
 
     rid: int
     graph: str  # registration name
@@ -44,12 +83,33 @@ class HGNNRequest:
 
 @dataclasses.dataclass
 class HGNNResponse:
+    """The served result for one :class:`HGNNRequest`.
+
+    ``latency_us`` is admission-to-completion wall time and always equals
+    ``queue_us + compute_us`` — the queueing share is what an async
+    deployment tunes (more tenants per step() raises it; the subset path
+    lowers the compute share).  ``params_version`` is the registration's
+    parameter version that produced the logits (see
+    ``HGNNServeEngine.swap_params``), and ``mode`` records which forward
+    served the request (``"full"`` or ``"subset"``).
+
+    Example::
+
+        fut = engine.submit(HGNNRequest(0, "acm", nodes=ids))
+        resp = fut.result(timeout=30)
+        assert resp.predictions.shape == (len(ids),)
+    """
+
     rid: int
     graph: str
     logits: np.ndarray  # (len(nodes), num_classes)
     predictions: np.ndarray  # (len(nodes),) argmax class ids
     latency_us: float  # admission -> completion wall time
     batched_with: int  # requests served by the same forward
+    queue_us: float = 0.0  # admission -> service start
+    compute_us: float = 0.0  # service start -> completion
+    params_version: int = 1  # registration's param version that served it
+    mode: str = "full"  # "full" | "subset" forward
 
 
 @dataclasses.dataclass
@@ -59,24 +119,77 @@ class _Registration:
     compiled: CompiledHGNN
     features: Dict
     params: Dict
+    version: int = 1
+
+
+@dataclasses.dataclass
+class _Pending:
+    req: HGNNRequest
+    nodes: Optional[np.ndarray]  # canonical int32, validated at submit
+    t_admit: float
+    future: "Future[HGNNResponse]"
+
+
+def _deliver(fut: Future, *, result=None, exc: Optional[Exception] = None
+             ) -> None:
+    # a client cancel() can win the race at any point before delivery;
+    # set_result/set_exception on a cancelled future raises, and that
+    # must not take down the rest of the drained batch
+    try:
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(result)
+    except InvalidStateError:
+        pass
 
 
 class HGNNServeEngine:
-    """Admit requests for many registered graphs; batch by fingerprint."""
+    """Admit requests for many registered graphs; batch by fingerprint.
+
+    Synchronous use (tests, benchmarks) calls ``step()`` directly;
+    production-shaped use starts the background admission loop::
+
+        engine = HGNNServeEngine(spec=ExecutorSpec())
+        engine.register("acm", graph, ["APA", "PAP"], cfg)
+        engine.run()                                  # background thread
+        fut = engine.submit(HGNNRequest(0, "acm", nodes=ids))
+        print(fut.result().predictions)
+        engine.stop()                                 # drain + join
+    """
 
     def __init__(self, session: Optional[Session] = None,
-                 spec: Optional[ExecutorSpec] = None):
+                 spec: Optional[ExecutorSpec] = None,
+                 policy: Optional[ServePolicy] = None):
+        """Build an engine over an existing ``Session`` (to share its
+        caches) or a fresh one from ``spec``; ``policy`` tunes admission
+        and batching (see ``repro.api.ServePolicy``)."""
         if session is not None and spec is not None:
             raise ValueError("pass a Session or a spec for a fresh one, "
                              "not both")
         self.session = session if session is not None else Session(spec)
+        self.policy = policy if policy is not None else ServePolicy()
         self._registered: Dict[str, _Registration] = {}
-        self._queue: List[tuple] = []  # (request, admission perf_counter)
+        self._queue: List[_Pending] = []
+        self._lock = threading.Lock()
+        self._queue_drained = threading.Condition(self._lock)
+        self._work_ready = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+        self._draining = False  # stop() in progress: admission closed
+        self._stop_epoch = 0  # bumped by stop(); fails submitters that
+        # were blocked on backpressure across it (their consumer is gone)
         self._served = 0
-        self._forwards = 0
+        self._forwards_full = 0
+        self._forwards_subset = 0
+        self._rejected = 0
         # bounded: a long-lived engine must not grow a per-request list
         # forever; percentiles come from the most recent window
         self._latencies_us: "collections.deque[float]" = collections.deque(
+            maxlen=4096)
+        self._queue_us: "collections.deque[float]" = collections.deque(
+            maxlen=4096)
+        self._compute_us: "collections.deque[float]" = collections.deque(
             maxlen=4096)
 
     # ---------------------------------------------------------- tenants --
@@ -86,9 +199,15 @@ class HGNNServeEngine:
                  warm: bool = True) -> CompiledHGNN:
         """Register a tenant: compile (cache-served through the shared
         session) and pin features + parameters.  ``warm=True`` runs one
-        forward so serving latency is steady-state, never jit compile."""
-        if name in self._registered:
-            raise ValueError(f"graph {name!r} already registered")
+        forward so serving latency is steady-state, never jit compile.
+
+        Example::
+
+            compiled = engine.register("acm", graph, ["APA", "PAP"], cfg)
+        """
+        with self._lock:
+            if name in self._registered:
+                raise ValueError(f"graph {name!r} already registered")
         compiled = self.session.compile(graph, targets, cfg)
         feats = features if features is not None else device_features(graph)
         if params is None:
@@ -97,84 +216,349 @@ class HGNNServeEngine:
                             params)
         if warm:
             compiled.forward(params, feats).block_until_ready()
-        self._registered[name] = reg
+        with self._lock:
+            if name in self._registered:
+                raise ValueError(f"graph {name!r} already registered")
+            self._registered[name] = reg
         return compiled
 
     @property
     def registered(self) -> List[str]:
-        return sorted(self._registered)
+        """Sorted registration names (``engine.registered`` -> ["acm"])."""
+        with self._lock:
+            return sorted(self._registered)
+
+    def swap_params(self, name: str, params: Dict) -> int:
+        """Atomically install new parameters into a live registration —
+        e.g. straight out of ``compiled.fit`` — and return the bumped
+        version.  In-flight requests are served by whichever version a
+        ``step()`` snapshots; every response stamps the version that
+        produced it, and versions observed in service order are
+        monotonically non-decreasing.
+
+        Example::
+
+            out = compiled.fit(feats, labels, masks, epochs=50)
+            v = engine.swap_params("acm", out["state"].params)
+        """
+        with self._lock:
+            reg = self._registered.get(name)
+            if reg is None:
+                raise KeyError(f"graph {name!r} not registered "
+                               f"(have {sorted(self._registered)})")
+            reg.params = params
+            reg.version += 1
+            return reg.version
 
     # --------------------------------------------------------- admission --
-    def submit(self, requests) -> None:
-        """Enqueue one request or a sequence (admission-timestamped)."""
-        if isinstance(requests, HGNNRequest):
-            requests = [requests]
-        requests = list(requests)
-        # validate the whole batch before admitting any of it, so a bad
-        # name cannot leave a half-enqueued batch behind the raise
-        for r in requests:
-            if r.graph not in self._registered:
-                raise KeyError(
-                    f"request {r.rid}: graph {r.graph!r} not registered "
-                    f"(have {self.registered})")
-        now = time.perf_counter()
-        self._queue.extend((r, now) for r in requests)
+    def _canonical_nodes(self, reg: _Registration, rid: int,
+                         nodes) -> Optional[np.ndarray]:
+        """Validate and canonicalize one request's node ids at admission
+        (int dtype, 1-D, non-empty, in-bounds — one shared validator
+        with ``forward_subset``) so a bad id fails the ``submit`` call,
+        never a batch mid-``step``."""
+        if nodes is None:
+            return None
+        return canonical_node_ids(nodes, reg.compiled.num_target,
+                                  ctx=f"request {rid}: nodes")
+
+    def submit(self, requests: Union[HGNNRequest, Sequence[HGNNRequest]],
+               ) -> "Union[Future[HGNNResponse], List[Future[HGNNResponse]]]":
+        """Validate and enqueue requests; returns one future per request
+        (a single future for a single request) that resolves to its
+        :class:`HGNNResponse` when a ``step()`` — the background loop's or
+        a direct call — serves it.
+
+        The whole batch is validated before any of it is admitted, so a
+        bad name or node id cannot leave a half-enqueued batch behind the
+        raise.  When the queue is at ``policy.max_queue``, ``"block"``
+        backpressure waits for the serving loop to drain capacity;
+        ``"reject"`` raises :class:`AdmissionError`.
+
+        Example::
+
+            futs = engine.submit([HGNNRequest(0, "acm", nodes=ids),
+                                  HGNNRequest(1, "imdb")])
+            responses = [f.result(timeout=30) for f in futs]
+        """
+        single = isinstance(requests, HGNNRequest)
+        reqs = [requests] if single else list(requests)
+        if len(reqs) > self.policy.max_queue:
+            with self._lock:
+                self._rejected += len(reqs)
+            raise AdmissionError(
+                f"batch of {len(reqs)} can never fit the admission "
+                f"queue (max_queue={self.policy.max_queue})")
+        with self._lock:
+            if self._draining:
+                raise AdmissionError("engine is stopping; admission closed")
+            regs = []
+            for r in reqs:
+                reg = self._registered.get(r.graph)
+                if reg is None:
+                    raise KeyError(
+                        f"request {r.rid}: graph {r.graph!r} not registered "
+                        f"(have {sorted(self._registered)})")
+                regs.append(reg)
+        # the O(n) id scans run outside the lock (registrations are never
+        # removed): a large batch must not stall the serving loop
+        pendings = [(r, self._canonical_nodes(reg, r.rid, r.nodes))
+                    for r, reg in zip(reqs, regs)]
+        with self._lock:
+            epoch = self._stop_epoch
+            while len(self._queue) + len(reqs) > self.policy.max_queue:
+                if self.policy.backpressure == "reject":
+                    self._rejected += len(reqs)
+                    raise AdmissionError(
+                        f"admission queue full ({len(self._queue)}/"
+                        f"{self.policy.max_queue} queued)")
+                if self._draining or self._stop_epoch != epoch:
+                    raise AdmissionError(
+                        "engine is stopping; admission closed")
+                self._queue_drained.wait(timeout=0.1)
+            if self._draining or self._stop_epoch != epoch:
+                # a submitter that blocked across a stop() must not
+                # enqueue into an engine whose consumer is gone — however
+                # late it wakes up
+                raise AdmissionError("engine is stopping; admission closed")
+            now = time.perf_counter()
+            futures: List[Future] = []
+            for r, nodes in pendings:
+                fut: "Future[HGNNResponse]" = Future()
+                self._queue.append(_Pending(r, nodes, now, fut))
+                futures.append(fut)
+            self._work_ready.notify_all()
+        return futures[0] if single else futures
 
     # ----------------------------------------------------------- serving --
+    def _serve_group(self, reg: _Registration, group: List[_Pending],
+                     params: Dict, version: int) -> List[HGNNResponse]:
+        """One compiled forward for every pending request of one
+        registration: the subset path when every request names ids whose
+        union coverage is within policy, the full-graph forward
+        otherwise.  Exactly one device->host transfer and one gather per
+        request either way."""
+        t_start = time.perf_counter()
+        nodes_list = [p.nodes for p in group]
+        union = None
+        if all(n is not None for n in nodes_list):
+            union = np.unique(np.concatenate(nodes_list))
+            coverage = union.size / max(1, reg.compiled.num_target)
+            if coverage > self.policy.subset_threshold:
+                union = None
+        if union is not None:
+            # union ids were canonicalized at admission; skip re-scanning
+            # them inside the timed serving window
+            logits = reg.compiled.forward_subset(
+                params, reg.features, union,
+                bucket_min=self.policy.bucket_min, validate=False)
+            mode = "subset"
+        else:
+            logits = reg.compiled.forward(params, reg.features)
+            mode = "full"
+        logits.block_until_ready()
+        done = time.perf_counter()
+        host_logits = np.asarray(logits)
+        preds_all = None if union is not None else host_logits.argmax(-1)
+        responses = []
+        compute_us = (done - t_start) * 1e6
+        for p in group:
+            if union is not None:
+                rows = host_logits[np.searchsorted(union, p.nodes)]
+                preds = rows.argmax(-1)
+            elif p.nodes is None:
+                rows, preds = host_logits, preds_all
+            else:
+                rows = host_logits[p.nodes]  # the one gather per request
+                preds = rows.argmax(-1)
+            queue_us = (t_start - p.t_admit) * 1e6
+            responses.append(HGNNResponse(
+                rid=p.req.rid,
+                graph=reg.name,
+                logits=rows,
+                predictions=preds,
+                latency_us=(done - p.t_admit) * 1e6,
+                batched_with=len(group),
+                queue_us=queue_us,
+                compute_us=compute_us,
+                params_version=version,
+                mode=mode,
+            ))
+        with self._lock:
+            # stats mutate under the lock: step() may legally run from a
+            # direct caller concurrently with the background loop
+            if mode == "subset":
+                self._forwards_subset += 1
+            else:
+                self._forwards_full += 1
+            for r in responses:
+                self._latencies_us.append(r.latency_us)
+                self._queue_us.append(r.queue_us)
+                self._compute_us.append(r.compute_us)
+            self._served += len(group)
+        return responses
+
     def step(self) -> List[HGNNResponse]:
         """Drain the queue: one compiled forward per registration serves
         all its queued requests; registrations sharing a topology
         fingerprint run adjacently (their frontend products are the same
-        cached objects).  Responses come back in service order."""
-        if not self._queue:
-            return []
-        queue, self._queue = self._queue, []
+        cached objects).  Responses come back in service order, and every
+        pending future resolves (to its response, or to the serving
+        exception if one escapes).
+
+        One group's serving failure (e.g. hot-swapped parameters with a
+        mismatched pytree) is isolated: its futures carry the exception,
+        every *other* drained group is still served, and the first error
+        re-raises after the drain so synchronous callers see it.
+
+        Example::
+
+            engine.submit([...]); responses = engine.step()
+        """
+        with self._lock:
+            if not self._queue:
+                return []
+            queue, self._queue = self._queue, []
+            self._queue_drained.notify_all()
         # fingerprint-major grouping; stable, so per-tenant FIFO holds
         order = sorted(
             range(len(queue)),
-            key=lambda i: (self._registered[queue[i][0].graph].fingerprint,
-                           queue[i][0].graph))
+            key=lambda i: (self._registered[queue[i].req.graph].fingerprint,
+                           queue[i].req.graph))
         responses: List[HGNNResponse] = []
+        first_error: Optional[Exception] = None
         i = 0
         while i < len(order):
-            name = queue[order[i]][0].graph
-            group = []
-            while i < len(order) and queue[order[i]][0].graph == name:
+            name = queue[order[i]].req.graph
+            group: List[_Pending] = []
+            while i < len(order) and queue[order[i]].req.graph == name:
                 group.append(queue[order[i]])
                 i += 1
-            reg = self._registered[name]
-            logits = reg.compiled.forward(reg.params, reg.features)
-            logits.block_until_ready()
-            done = time.perf_counter()
-            host_logits = np.asarray(logits)
-            preds = host_logits.argmax(-1)
-            self._forwards += 1
-            for req, t_admit in group:
-                rows = (host_logits if req.nodes is None
-                        else host_logits[np.asarray(req.nodes)])
-                latency = (done - t_admit) * 1e6
-                self._latencies_us.append(latency)
-                responses.append(HGNNResponse(
-                    rid=req.rid,
-                    graph=name,
-                    logits=rows,
-                    predictions=(preds if req.nodes is None
-                                 else preds[np.asarray(req.nodes)]),
-                    latency_us=latency,
-                    batched_with=len(group),
-                ))
-            self._served += len(group)
+            with self._lock:
+                # snapshot (params, version) as one atomic pair: a racing
+                # swap_params either fully serves this group or the next
+                reg = self._registered[name]
+                params, version = reg.params, reg.version
+            try:
+                group_responses = self._serve_group(reg, group, params,
+                                                    version)
+            except Exception as e:
+                # fail THIS group's futures, keep serving the others —
+                # an admitted request must never be silently dropped
+                for p in group:
+                    _deliver(p.future, exc=e)
+                if first_error is None:
+                    first_error = e
+                continue
+            for p, resp in zip(group, group_responses):
+                _deliver(p.future, result=resp)
+            responses.extend(group_responses)
+        if first_error is not None:
+            raise first_error
         return responses
+
+    # -------------------------------------------------------------- loop --
+    def run(self) -> None:
+        """Start the async admission loop: a daemon thread drives
+        ``step()`` whenever the queue is non-empty, so ``submit`` returns
+        immediately and responses arrive through their futures.
+
+        Example::
+
+            engine.run()
+            fut = engine.submit(HGNNRequest(0, "acm", nodes=ids))
+            resp = fut.result(timeout=30)
+            engine.stop()
+        """
+        with self._lock:
+            if self._running:
+                raise RuntimeError("admission loop already running")
+            self._running = True
+        self._thread = threading.Thread(target=self._loop,
+                                        name="hgnn-serve-loop", daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        """Background serving loop: wait for work, drain it, repeat;
+        drains whatever is still queued when ``stop()`` flips the flag."""
+        while True:
+            with self._lock:
+                while self._running and not self._queue:
+                    self._work_ready.wait(timeout=0.05)
+                if not self._running and not self._queue:
+                    return
+            try:
+                self.step()
+            except Exception:
+                # the group's futures already carry the exception; the
+                # loop keeps serving the remaining tenants
+                continue
+
+    def stop(self) -> None:
+        """Stop the admission loop: close admission (a ``submit`` blocked
+        on backpressure raises ``AdmissionError`` instead of enqueueing
+        into an engine with no consumer), drain everything already
+        queued, then join the thread.  Safe to call when the loop never
+        ran (the backlog is still drained); after it returns, ``step()``
+        on the empty queue returns ``[]`` and admission reopens."""
+        with self._lock:
+            self._running = False
+            self._draining = True
+            self._stop_epoch += 1
+            self._work_ready.notify_all()
+            self._queue_drained.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        try:
+            # anything that slipped in before admission closed gets
+            # served; a failed group's futures carry its error
+            while True:
+                try:
+                    if not self.step():
+                        break
+                except Exception:
+                    continue
+        finally:
+            with self._lock:
+                self._draining = False
+
+    @property
+    def running(self) -> bool:
+        """Whether the background admission loop is live."""
+        return self._thread is not None and self._thread.is_alive()
 
     # ------------------------------------------------------------- stats --
     def stats(self) -> Dict:
-        lat = np.asarray(self._latencies_us) if self._latencies_us else None
-        return {
-            "graphs_registered": len(self._registered),
-            "requests_served": self._served,
-            "forwards": self._forwards,
-            "batching_factor": self._served / max(1, self._forwards),
-            "latency_us_p50": float(np.percentile(lat, 50)) if lat is not None else None,
-            "latency_us_p95": float(np.percentile(lat, 95)) if lat is not None else None,
-            "session": self.session.stats(),
-        }
+        """One serving snapshot: request/forward counts split by mode,
+        batching factor, latency percentiles with the queueing-vs-compute
+        split, and the shared session's cache stats.
+
+        Example::
+
+            s = engine.stats()
+            print(s["batching_factor"], s["queue_us_p50"],
+                  s["compute_us_p50"])
+        """
+        def _pct(deque_, q):
+            return (float(np.percentile(np.asarray(deque_), q))
+                    if deque_ else None)
+
+        with self._lock:
+            forwards = self._forwards_full + self._forwards_subset
+            return {
+                "graphs_registered": len(self._registered),
+                "requests_served": self._served,
+                "requests_rejected": self._rejected,
+                "queued": len(self._queue),
+                "running": self._running,
+                "forwards": forwards,
+                "forwards_full": self._forwards_full,
+                "forwards_subset": self._forwards_subset,
+                "batching_factor": self._served / max(1, forwards),
+                "latency_us_p50": _pct(self._latencies_us, 50),
+                "latency_us_p95": _pct(self._latencies_us, 95),
+                "queue_us_p50": _pct(self._queue_us, 50),
+                "compute_us_p50": _pct(self._compute_us, 50),
+                "session": self.session.stats(),
+            }

@@ -1,0 +1,324 @@
+"""Async serving engine: subset forward (jit stability + bitwise parity),
+admission validation, backpressure, the background loop, and parameter
+hot-swap version monotonicity under a racing submitter."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import ExecutorSpec, ServePolicy, Session, device_features
+from repro.core.hgnn import HGNNConfig
+from repro.serve import (AdmissionError, HGNNRequest, HGNNResponse,
+                         HGNNServeEngine)
+
+TARGETS = ["APA", "PAP", "PSP"]
+
+
+def _cfg(model="rgcn", **kw):
+    kw.setdefault("hidden", 16)
+    kw.setdefault("num_layers", 2)
+    return HGNNConfig(model=model, num_classes=3, target_type="P", **kw)
+
+
+@pytest.fixture(scope="module")
+def served(acm_small):
+    """One jnp session + compiled model + pinned feats/params, shared by
+    every engine in this module (engines differ only in policy)."""
+    sess = Session(ExecutorSpec())
+    compiled = sess.compile(acm_small, TARGETS, _cfg())
+    return {
+        "graph": acm_small,
+        "session": sess,
+        "compiled": compiled,
+        "feats": device_features(acm_small),
+        "params": compiled.init(0),
+    }
+
+
+def _engine(served, policy=None, name="acm"):
+    eng = HGNNServeEngine(session=served["session"], policy=policy)
+    eng.register(name, served["graph"], TARGETS, _cfg(),
+                 params=served["params"])
+    return eng
+
+
+# ------------------------------------------------------- subset forward --
+def test_forward_subset_bitwise_matches_full_rows(served):
+    c, feats, params = served["compiled"], served["feats"], served["params"]
+    full = np.asarray(c.forward(params, feats))
+    ids = np.array([7, 0, 3, c.num_target - 1], np.int64)
+    sub = np.asarray(c.forward_subset(params, feats, ids))
+    assert sub.shape == (4, 3)
+    np.testing.assert_array_equal(sub, full[ids])  # bitwise, same trace
+
+
+def test_forward_subset_duplicate_ids_and_order(served):
+    """Duplicate ids in one request are served per-position (no implicit
+    dedup on the caller-visible surface), and order is preserved."""
+    c, feats, params = served["compiled"], served["feats"], served["params"]
+    full = np.asarray(c.forward(params, feats))
+    ids = np.array([5, 2, 5, 5, 2], np.int64)
+    sub = np.asarray(c.forward_subset(params, feats, ids))
+    np.testing.assert_array_equal(sub, full[ids])
+
+
+def test_forward_subset_no_retrace_within_bucket(served):
+    """Same-bucket resubmissions must reuse the compiled subset forward:
+    the compile-count guard for the serving hot path."""
+    c, feats, params = served["compiled"], served["feats"], served["params"]
+    c.forward_subset(params, feats, np.arange(3))  # bucket 8
+    t0 = c.subset_traces
+    for ids in (np.array([1, 4]), np.arange(8), np.array([9, 3, 5])):
+        c.forward_subset(params, feats, ids)  # all land in bucket 8
+    assert c.subset_traces == t0  # zero retraces
+    c.forward_subset(params, feats, np.arange(9))  # bucket 16: one trace
+    assert c.subset_traces == t0 + 1
+    c.forward_subset(params, feats, np.arange(12, 28))  # still bucket 16
+    assert c.subset_traces == t0 + 1
+
+
+def test_forward_subset_validates_ids(served):
+    c, feats, params = served["compiled"], served["feats"], served["params"]
+    with pytest.raises(TypeError, match="integer"):
+        c.forward_subset(params, feats, np.array([0.5, 1.0]))
+    with pytest.raises(ValueError, match="bounds"):
+        c.forward_subset(params, feats, np.array([c.num_target]))
+    with pytest.raises(ValueError, match="1-D"):
+        c.forward_subset(params, feats, np.array([], np.int32))
+
+
+# ------------------------------------------------- engine: subset path --
+def test_engine_subset_and_full_parity_on_one_queue(served):
+    """One queue, two groups: the all-explicit group goes through the
+    subset forward, the group containing nodes=None falls back to the
+    full forward — and both produce identical rows for the same ids."""
+    eng = HGNNServeEngine(session=served["session"],
+                          policy=ServePolicy(subset_threshold=0.5))
+    eng.register("sub", served["graph"], TARGETS, _cfg(),
+                 params=served["params"])
+    eng.register("full", served["graph"], TARGETS, _cfg(),
+                 params=served["params"])
+    ids = np.array([11, 3, 3, 40], np.int64)
+    eng.submit([
+        HGNNRequest(0, "sub", nodes=ids),
+        HGNNRequest(1, "sub", nodes=np.array([5, 11])),
+        HGNNRequest(2, "full", nodes=ids),
+        HGNNRequest(3, "full"),  # None => whole-graph rows, full forward
+    ])
+    by_rid = {r.rid: r for r in eng.step()}
+    assert by_rid[0].mode == by_rid[1].mode == "subset"
+    assert by_rid[2].mode == by_rid[3].mode == "full"
+    # subset rows == full-forward rows, bitwise (same trace, same params)
+    np.testing.assert_array_equal(by_rid[0].logits, by_rid[2].logits)
+    np.testing.assert_array_equal(by_rid[0].logits, by_rid[3].logits[ids])
+    np.testing.assert_array_equal(by_rid[0].predictions,
+                                  by_rid[2].predictions)
+    st = eng.stats()
+    assert st["forwards_subset"] == 1 and st["forwards_full"] == 1
+    assert st["queue_us_p50"] is not None and st["compute_us_p50"] > 0
+    for r in by_rid.values():
+        assert r.latency_us == pytest.approx(r.queue_us + r.compute_us,
+                                             rel=1e-6)
+
+
+def test_engine_subset_threshold_forces_full(served):
+    """subset_threshold=0 disables the subset path even for tiny
+    explicit requests."""
+    eng = _engine(served, ServePolicy(subset_threshold=0.0))
+    eng.submit(HGNNRequest(0, "acm", nodes=np.array([1, 2])))
+    (resp,) = eng.step()
+    assert resp.mode == "full"
+    assert eng.stats()["forwards_subset"] == 0
+
+
+def test_engine_duplicate_ids_in_one_request(served):
+    eng = _engine(served)
+    ids = np.array([9, 9, 1, 9], np.int64)
+    fut = eng.submit(HGNNRequest(0, "acm", nodes=ids))
+    (resp,) = eng.step()
+    full = np.asarray(served["compiled"].forward(served["params"],
+                                                 served["feats"]))
+    assert resp.mode == "subset"
+    np.testing.assert_array_equal(resp.logits, full[ids])
+    assert fut.result(timeout=5) is resp
+
+
+# ------------------------------------------------------------ admission --
+def test_submit_validates_nodes_at_admission(served):
+    eng = _engine(served)
+    n = served["compiled"].num_target
+    with pytest.raises(ValueError, match="out of.*bounds"):
+        eng.submit(HGNNRequest(0, "acm", nodes=np.array([0, n])))
+    with pytest.raises(ValueError, match="out of.*bounds"):
+        eng.submit(HGNNRequest(1, "acm", nodes=np.array([-1])))
+    with pytest.raises(TypeError, match="integer"):
+        eng.submit(HGNNRequest(2, "acm", nodes=np.array([0.25, 1.5])))
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(HGNNRequest(3, "acm", nodes=np.array([[1, 2]])))
+    # a bad request anywhere in a batch admits nothing
+    with pytest.raises(ValueError):
+        eng.submit([HGNNRequest(4, "acm", nodes=np.array([1])),
+                    HGNNRequest(5, "acm", nodes=np.array([n + 3]))])
+    assert eng.step() == []  # nothing slipped into the queue
+
+
+def test_reject_backpressure_and_oversized_batch(served):
+    eng = _engine(served, ServePolicy(max_queue=2, backpressure="reject"))
+    eng.submit([HGNNRequest(0, "acm"), HGNNRequest(1, "acm")])
+    with pytest.raises(AdmissionError, match="queue full"):
+        eng.submit(HGNNRequest(2, "acm"))
+    with pytest.raises(AdmissionError, match="never fit"):
+        eng.submit([HGNNRequest(3, "acm") for _ in range(3)])
+    assert eng.stats()["requests_rejected"] == 4
+    assert len(eng.step()) == 2  # the admitted two still get served
+
+
+def test_block_backpressure_unblocks_on_drain(served):
+    eng = _engine(served, ServePolicy(max_queue=1, backpressure="block"))
+    eng.submit(HGNNRequest(0, "acm", nodes=np.array([1])))
+    t = threading.Thread(
+        target=lambda: eng.submit(HGNNRequest(1, "acm",
+                                              nodes=np.array([2]))))
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()  # blocked on the full queue
+    eng.step()  # drains -> unblocks the submitter
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert len(eng.step()) == 1
+
+
+# ------------------------------------------------------------ async loop --
+def test_async_loop_serves_futures_and_stops(served):
+    eng = _engine(served)
+    eng.run()
+    with pytest.raises(RuntimeError, match="already running"):
+        eng.run()
+    futs = eng.submit([HGNNRequest(i, "acm", nodes=np.array([i, i + 1]))
+                       for i in range(6)])
+    responses = [f.result(timeout=30) for f in futs]
+    assert all(isinstance(r, HGNNResponse) for r in responses)
+    assert [r.rid for r in responses] == list(range(6))
+    eng.stop()
+    assert not eng.running
+    assert eng.step() == []  # empty step after stop
+    eng.stop()  # idempotent
+
+
+def test_stop_drains_pending_queue(served):
+    eng = _engine(served)
+    futs = eng.submit([HGNNRequest(i, "acm", nodes=np.array([i]))
+                       for i in range(4)])  # queued before the loop starts
+    eng.run()
+    eng.stop()  # must serve the backlog before joining
+    assert all(f.done() for f in futs)
+    assert {f.result().rid for f in futs} == {0, 1, 2, 3}
+
+
+def test_stop_rejects_submitter_blocked_on_backpressure(served):
+    """A submitter blocked on block-mode backpressure when stop() runs
+    gets AdmissionError (its consumer is gone) instead of enqueueing
+    futures nobody will ever resolve."""
+    eng = _engine(served, ServePolicy(max_queue=1, backpressure="block"))
+    f0 = eng.submit(HGNNRequest(0, "acm", nodes=np.array([1])))
+    outcome = []
+
+    def _blocked():
+        try:
+            eng.submit(HGNNRequest(1, "acm", nodes=np.array([2])))
+            outcome.append("enqueued")
+        except AdmissionError:
+            outcome.append("rejected")
+
+    t = threading.Thread(target=_blocked)
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()  # blocked on the full queue
+    eng.stop()  # drains rid 0, closes admission for the blocked submitter
+    t.join(timeout=5)
+    assert outcome == ["rejected"]
+    assert f0.result(timeout=5).rid == 0
+
+
+def test_group_failure_is_isolated(served):
+    """A group whose forward blows up (bad hot-swapped params) fails only
+    its own futures: the other drained groups are still served, and the
+    sync caller sees the first error after the drain."""
+    eng = HGNNServeEngine(session=served["session"])
+    eng.register("bad", served["graph"], TARGETS, _cfg(),
+                 params=served["params"])
+    eng.register("good", served["graph"], TARGETS, _cfg(),
+                 params=served["params"])
+    eng.swap_params("bad", {"not": "params"})  # poisons the next forward
+    f_bad = eng.submit(HGNNRequest(0, "bad", nodes=np.array([1])))
+    f_good = eng.submit(HGNNRequest(1, "good", nodes=np.array([1])))
+    with pytest.raises(Exception):
+        eng.step()  # "bad" sorts (and fails) first, "good" still serves
+    assert isinstance(f_bad.exception(timeout=5), Exception)
+    assert f_good.result(timeout=5).rid == 1
+
+
+def test_cancelled_future_does_not_break_the_batch(served):
+    eng = _engine(served)
+    f0 = eng.submit(HGNNRequest(0, "acm", nodes=np.array([1])))
+    f1 = eng.submit(HGNNRequest(1, "acm", nodes=np.array([2])))
+    assert f0.cancel()
+    responses = eng.step()  # must not raise InvalidStateError
+    assert len(responses) == 2  # served; only the delivery was skipped
+    assert f0.cancelled() and f1.result(timeout=5).rid == 1
+
+
+# --------------------------------------------------------- param swap --
+def test_swap_params_changes_logits_and_version(served):
+    eng = _engine(served)
+    eng.submit(HGNNRequest(0, "acm", nodes=np.array([3])))
+    (before,) = eng.step()
+    assert before.params_version == 1
+    v = eng.swap_params("acm", served["compiled"].init(99))
+    assert v == 2
+    eng.submit(HGNNRequest(1, "acm", nodes=np.array([3])))
+    (after,) = eng.step()
+    assert after.params_version == 2
+    assert not np.array_equal(before.logits, after.logits)
+    with pytest.raises(KeyError, match="not registered"):
+        eng.swap_params("nope", served["params"])
+
+
+def test_swap_params_version_monotonic_under_racing_submitter(served):
+    """Hot-swap while a submitter races the loop: every response carries
+    the version that served it, and versions are non-decreasing in
+    service order (the (params, version) snapshot is atomic)."""
+    eng = _engine(served)
+    versions, order_lock = [], threading.Lock()
+
+    def _record(f):
+        with order_lock:
+            versions.append(f.result().params_version)
+
+    eng.run()
+    stop_flag = threading.Event()
+
+    def _submitter():
+        rid = 0
+        while not stop_flag.is_set():
+            fut = eng.submit(HGNNRequest(rid, "acm",
+                                         nodes=np.array([rid % 50])))
+            fut.add_done_callback(_record)
+            rid += 1
+            time.sleep(0.002)
+
+    t = threading.Thread(target=_submitter)
+    t.start()
+    last_version = 1
+    for seed in range(4):
+        time.sleep(0.02)
+        last_version = eng.swap_params("acm",
+                                       served["compiled"].init(seed + 1))
+    stop_flag.set()
+    t.join(timeout=10)
+    eng.stop()
+    assert last_version == 5
+    assert len(versions) > 0
+    assert versions == sorted(versions)  # monotone in service order
+    assert all(1 <= v <= 5 for v in versions)

@@ -1,0 +1,82 @@
+"""Fail on broken intra-repo links in the markdown docs.
+
+Scans ``README.md``, ``ROADMAP.md``, and ``docs/*.md`` (or an explicit
+file list) for inline markdown links/images and verifies that every
+relative target resolves to an existing file or directory, relative to
+the markdown file that references it.  External links (``http(s)://``,
+``mailto:``) and pure in-page anchors (``#section``) are skipped;
+``path#anchor`` links are checked for the path part only.
+
+Usage:
+  python tools/check_links.py [file.md ...]     # exit 1 on any broken link
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_FILES = ("README.md", "ROADMAP.md")
+
+# inline links and images: [text](target) / ![alt](target); targets with
+# spaces or nested parens are not used in this repo's docs
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_md_files(argv: list) -> list:
+    if argv:
+        # resolve so relative CLI paths survive the relative_to(REPO_ROOT)
+        # used in the report lines
+        return [Path(a).resolve() for a in argv]
+    files = [REPO_ROOT / name for name in DEFAULT_FILES]
+    files.extend(sorted((REPO_ROOT / "docs").glob("*.md")))
+    return files
+
+
+def check_file(md: Path) -> list:
+    """Broken-link messages for one markdown file."""
+    problems = []
+    text = md.read_text(encoding="utf-8")
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for target in _LINK_RE.findall(line):
+            if target.startswith(_EXTERNAL):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:  # pure in-page anchor
+                continue
+            resolved = (md.parent / path_part).resolve()
+            if not resolved.exists():
+                try:
+                    shown = md.relative_to(REPO_ROOT)
+                except ValueError:  # a file outside the repo root
+                    shown = md
+                problems.append(
+                    f"{shown}:{lineno}: broken link -> {target}")
+    return problems
+
+
+def main(argv: list) -> int:
+    files = iter_md_files(argv)
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        for f in missing:
+            print(f"check_links: no such file {f}")
+        return 1
+    problems = []
+    checked = 0
+    for md in files:
+        problems.extend(check_file(md))
+        checked += 1
+    if problems:
+        print(f"check_links: {len(problems)} broken link(s):")
+        for p in problems:
+            print(f"  FAIL {p}")
+        return 1
+    print(f"check_links: OK — {checked} file(s), no broken intra-repo links")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
