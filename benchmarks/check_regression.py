@@ -10,7 +10,9 @@ the CI runner:
   gfp_bench/v1    banded-vs-jnp per-layer latency ratio per model, and
                   restructured-vs-original HBM tile-load ratio per
                   semantic graph (deterministic);
-  train_bench/v1  banded-vs-jnp per-epoch latency ratio per dataset.
+  train_bench/v1  banded-vs-jnp per-epoch latency ratio per dataset;
+  pipeline_bench/v1  serving subset-vs-full latency ratios (head-only
+                  and k-hop dependency mode) for the same request queue.
 
 Scale adjustment: ratio metrics are only meaningful between points of
 the same ``scale`` (tiny graphs fit one source band, so e.g. the tile
@@ -56,6 +58,13 @@ def extract_metrics(point: Dict) -> Dict[str, float]:
             r = entry.get("latency_ratio_banded_vs_jnp")
             if r:
                 metrics[f"train/{ds}/latency_ratio"] = r
+    elif schema.startswith("pipeline_bench/"):
+        # serving latency ratios vs the full-graph forward round
+        # (subset_vs_full, dependency_vs_full); lower is better, < 1.0
+        # means the subset path beats paying for the whole graph
+        for k, r in point.get("serve", {}).items():
+            if r:
+                metrics[f"serve/{k}"] = r
     else:
         raise ValueError(f"unknown bench schema {schema!r}")
     return metrics

@@ -13,19 +13,31 @@ Reports, per dataset/workload:
                        ``repro.api.Session``: several graphs registered,
                        queued requests batched through compiled forwards.
                        Reports the same queue served through the
-                       full-graph forward vs the node-subset micro-batch
-                       path (``subset_threshold``), per-request p50
-                       latency with its queueing-vs-compute split, an
-                       async (background admission loop) round, and the
-                       session's warm-cache hit-rate.
+                       full-graph forward, the head-only node-subset
+                       micro-batch path (``subset_threshold``), and the
+                       k-hop dependency executor
+                       (``subset_mode="dependency"`` — message passing
+                       over the union's receptive-field closure), plus
+                       per-request p50 latency with its
+                       queueing-vs-compute split, an async (background
+                       admission loop) round, and the session's
+                       warm-cache hit-rate.
 
-Run:  PYTHONPATH=src:. python benchmarks/pipeline_bench.py [scale]
+With a second positional argument the serve section's dimensionless
+ratios are also written as a ``pipeline_bench/v1`` JSON point for the
+regression gate (``check_regression.py``): ``subset_vs_full`` and
+``dependency_vs_full`` are timed-round-vs-full-round latency ratios
+(lower is better; < 1.0 means the subset path beats paying for the
+whole graph).
+
+Run:  PYTHONPATH=src:. python benchmarks/pipeline_bench.py [scale] [out.json]
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
-from typing import List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -127,17 +139,22 @@ def _requests():
     ]
 
 
-def bench_serving(scale: float = 0.25) -> List[str]:
+def bench_serving(scale: float = 0.25) -> Tuple[List[str], Dict[str, float]]:
     """Async multi-tenant serving: >= 2 graphs on one engine.
 
-    The same 24-request queue is served three ways: through the
-    full-graph forward (``subset_threshold=0``), through the node-subset
-    micro-batch path (union of each group's requested ids gathered
-    through the classifier head), and through the background admission
-    loop (futures).  Every engine shares one Session, so registrations
-    after the first are warm-cache hits.
+    The same 24-request queue is served four ways: through the
+    full-graph forward (``subset_threshold=0``), through the head-only
+    node-subset micro-batch path (union of each group's requested ids
+    gathered through the classifier head), through the k-hop dependency
+    executor (``subset_mode="dependency"`` — message passing itself runs
+    over the union's receptive-field closure), and through the
+    background admission loop (futures).  Every engine shares one
+    Session, so registrations after the first are warm-cache hits.
+    Returns the report rows plus the dimensionless serve ratios for the
+    ``pipeline_bench/v1`` JSON point.
     """
     out = []
+    metrics: Dict[str, float] = {}
     session = Session(ExecutorSpec())
 
     # --- full-graph forward for every group (subset path disabled) ---
@@ -166,6 +183,7 @@ def bench_serving(scale: float = 0.25) -> List[str]:
     sub_us = (time.perf_counter() - t0) * 1e6
     assert all(r.mode == "subset" for r in responses)
     s = eng_sub.stats()
+    metrics["subset_vs_full"] = sub_us / max(full_us, 1e-9)
     out.append(row(
         "serve/subset_batch", sub_us,
         f"forwards={s['forwards_subset']};"
@@ -177,6 +195,29 @@ def bench_serving(scale: float = 0.25) -> List[str]:
         f"queue_p50={np.percentile([r.queue_us for r in responses], 50):.0f};"
         f"compute_p50={np.percentile([r.compute_us for r in responses], 50):.0f};"
         f"warm_cache_hit_rate={s['session'].hit_rate:.2f}"))
+
+    # --- k-hop dependency executor: message passing over the union's
+    # receptive-field closure (dependency_threshold=1.0 pins the path so
+    # the row measures the executor, not the policy fallback); warm
+    # round pays extraction + calibration + traces, timed round is the
+    # steady state the admission loop sees ---
+    eng_dep = _make_engine(
+        session,
+        ServePolicy(subset_threshold=0.5, subset_mode="dependency",
+                    dependency_threshold=1.0), scale)
+    eng_dep.submit(_requests())
+    eng_dep.step()  # warm: extraction memo + betas + one trace per tenant
+    eng_dep.submit(_requests())
+    t0 = time.perf_counter()
+    responses = eng_dep.step()
+    dep_us = (time.perf_counter() - t0) * 1e6
+    assert all(r.mode == "dependency" for r in responses)
+    s = eng_dep.stats()
+    metrics["dependency_vs_full"] = dep_us / max(full_us, 1e-9)
+    out.append(row(
+        "serve/dependency_batch", dep_us,
+        f"forwards={s['forwards_dependency']};"
+        f"vs_full={full_us / max(dep_us, 1e-9):.2f}x"))
 
     # --- async admission loop: submit returns futures immediately; the
     # background thread batches and serves (queue share now includes the
@@ -195,16 +236,25 @@ def bench_serving(scale: float = 0.25) -> List[str]:
         "serve/async_batch", async_us,
         f"queue_p50={q_p50:.0f};compute_p50={c_p50:.0f};"
         f"batching={len(responses) / max(1, forwards):.1f}"))
-    return out
+    return out, metrics
 
 
 def main() -> None:
     scale = float(sys.argv[1]) if len(sys.argv) > 1 else 0.25
+    out_json = sys.argv[2] if len(sys.argv) > 2 else None
     print("name,us_per_call,derived")
     for line in bench_pipeline(scale):
         print(line, flush=True)
-    for line in bench_serving(scale):
+    serve_rows, serve_metrics = bench_serving(scale)
+    for line in serve_rows:
         print(line, flush=True)
+    if out_json:
+        point = {"schema": "pipeline_bench/v1", "scale": scale,
+                 "serve": serve_metrics}
+        with open(out_json, "w") as f:
+            json.dump(point, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {out_json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.api.spec import ExecutorSpec
 from repro.core.hgnn.models import HGNN, HGNNConfig
+from repro.core.subgraph import DependencyExtractor, DependencySubset
 from repro.hetero.graph import HetGraph
 from repro.pipeline.cache import SemanticGraphCache
 from repro.pipeline.frontend import FrontendPipeline, FrontendResult
@@ -126,6 +127,14 @@ class CompiledHGNN:
         self._forward = None
         self._forward_subset = None
         self._subset_traces = 0
+        self._forward_dep = None
+        self._dependency_traces = 0
+        self._extractor: Optional[DependencyExtractor] = None
+        # frozen SF betas per (params, features) object pair — the
+        # dependency path's calibration artifacts (strong refs keep the
+        # id()-based keys valid for the life of each entry)
+        self._beta_fn = None
+        self._beta_memo: "OrderedDict[Tuple[int, int], Tuple]" = OrderedDict()
         # guards every lazy jit build: two threads racing the first call
         # must not each build (and trace) their own jitted function, or
         # compile work doubles and the no-retrace compile-count guard
@@ -192,24 +201,98 @@ class CompiledHGNN:
         """
         return self._subset_traces
 
+    @property
+    def dependency_traces(self) -> int:
+        """How many times the dependency-subset forward has (re)traced —
+        stable across requests whose closures share a bucket signature
+        (see ``DependencySubset.signature``), the dependency-mode sibling
+        of :attr:`subset_traces`."""
+        return self._dependency_traces
+
+    def dependency_subset(self, node_ids, *, bucket_min: int = 8,
+                          validate: bool = True) -> DependencySubset:
+        """The k-hop dependency closure for an id set (memoized).
+
+        Runs the host-side extractor (``core.subgraph``) over the
+        frontend's cached semantic graphs — ``cfg.num_layers`` hops
+        backward from the requested target ids — and returns the
+        device-ready ``DependencySubset``.  Resubmissions of the same id
+        set (any order, duplicates allowed) return the identical object;
+        the serving engine reads ``.coverage`` off it to decide
+        dependency-vs-full before paying for execution.
+
+        Example::
+
+            sub = compiled.dependency_subset(np.array([4, 7]))
+            assert sub.coverage <= 1.0
+        """
+        if validate:
+            node_ids = canonical_node_ids(node_ids, self.num_target)
+        if self._extractor is None:
+            with self._build_lock:
+                if self._extractor is None:
+                    self._extractor = DependencyExtractor(
+                        self.model, self.graphs, self.frontend.semantic,
+                        flavor=self.spec.na_executor)
+        return self._extractor.extract(node_ids, bucket_min=bucket_min)
+
+    def _fusion_betas(self, params, features):
+        """Frozen SF betas for (params, features), memoized by object
+        identity (strong refs pin the keys); serving recalibrates when
+        ``swap_params`` installs a new params object."""
+        key = (id(params), id(features))
+        ent = self._beta_memo.get(key)
+        if ent is not None and ent[0] is params and ent[1] is features:
+            self._beta_memo.move_to_end(key)
+            return ent[2]
+        if self._beta_fn is None:
+            with self._build_lock:
+                if self._beta_fn is None:
+                    spec = self.spec
+
+                    def beta_fn(p, f):
+                        return self.model.fusion_betas(
+                            p, f, self.graphs,
+                            na_executor=spec.na_executor,
+                            kernel_backend=spec.na_kernel_backend)
+
+                    self._beta_fn = jax.jit(beta_fn)
+        betas = self._beta_fn(params, features)
+        self._beta_memo[key] = (params, features, betas)
+        while len(self._beta_memo) > 4:
+            self._beta_memo.popitem(last=False)
+        return betas
+
     def forward_subset(self, params, features, node_ids,
                        *, bucket_min: int = 8,
-                       validate: bool = True) -> jax.Array:
+                       validate: bool = True,
+                       mode: str = "head") -> jax.Array:
         """Logits for an explicit subset of target vertices (jitted).
 
-        Message passing still runs full-graph — a vertex's logits depend
-        on its whole receptive field — but only the requested rows of the
-        final hidden state are gathered through the classifier head, so a
-        micro-batch of node-subset requests skips the full-head matmul
-        and the full-logits device->host transfer.  Row ``i`` of the
-        result is bitwise-equal to row ``node_ids[i]`` of
-        :meth:`forward` under the same trace.
+        ``mode="head"`` (default): message passing still runs full-graph
+        — a vertex's logits depend on its whole receptive field — but
+        only the requested rows of the final hidden state are gathered
+        through the classifier head, so a micro-batch of node-subset
+        requests skips the full-head matmul and the full-logits
+        device->host transfer.  Row ``i`` of the result is bitwise-equal
+        to row ``node_ids[i]`` of :meth:`forward` under the same trace.
 
-        ``node_ids`` is padded to the next power-of-two bucket (at least
-        ``bucket_min``) before entering the jitted function, so repeated
-        calls with different ids — the serving engine's resubmission
-        pattern — only retrace when the bucket grows, never per request
-        (see :attr:`subset_traces`).
+        ``mode="dependency"``: message passing itself runs over the ids'
+        k-hop dependency closure (:meth:`dependency_subset`) — the
+        vertex-centric executor, whose compute and peak live arrays are
+        bounded by the receptive field, not the graph.  Rows match
+        :meth:`forward` to reassociation tolerance; semantic-fusion betas
+        are frozen from one full calibration forward per
+        (params, features) pair (they are graph-level statistics — see
+        ``HGNN.fusion_betas``), which serving pays at registration /
+        parameter swap, never per request.
+
+        ``node_ids`` (and, in dependency mode, every closure/edge array)
+        is padded to power-of-two buckets (at least ``bucket_min``)
+        before entering the jitted function, so repeated calls with
+        different ids — the serving engine's resubmission pattern — only
+        retrace when a bucket grows, never per request (see
+        :attr:`subset_traces` / :attr:`dependency_traces`).
 
         ``validate=False`` skips the id re-validation for callers that
         already canonicalized through ``canonical_node_ids`` (the serving
@@ -221,10 +304,16 @@ class CompiledHGNN:
             rows = compiled.forward_subset(params, feats, np.array([4, 7]))
             assert rows.shape == (2, cfg.num_classes)
         """
+        if mode not in ("head", "dependency"):
+            raise ValueError(f"unknown forward_subset mode {mode!r} "
+                             "(expected 'head' or 'dependency')")
         if validate:
             ids = canonical_node_ids(node_ids, self.num_target)
         else:
             ids = np.asarray(node_ids)
+        if mode == "dependency":
+            return self._forward_dependency(params, features, ids,
+                                            bucket_min=bucket_min)
         if self._forward_subset is None:
             with self._build_lock:
                 if self._forward_subset is None:
@@ -247,6 +336,38 @@ class CompiledHGNN:
         padded[:n] = ids
         out = self._forward_subset(params, features, jnp.asarray(padded))
         return out[:n]
+
+    def _forward_dependency(self, params, features, ids,
+                            *, bucket_min: int = 8) -> jax.Array:
+        """The dependency-mode body of :meth:`forward_subset`: extract
+        (memoized), calibrate betas (memoized), run the one jitted
+        dependency executor, and restore the caller's id order."""
+        sub = self.dependency_subset(ids, bucket_min=bucket_min,
+                                     validate=False)
+        betas = self._fusion_betas(params, features)
+        if self._forward_dep is None:
+            with self._build_lock:
+                if self._forward_dep is None:
+                    spec = self.spec
+
+                    def fwd_dep(p, f, b, dep):
+                        # traced once per bucket signature; the counter
+                        # increments at trace time only (the dependency
+                        # no-retrace guard observes it)
+                        self._dependency_traces += 1
+                        return self.model.execute_dependency_subset(
+                            p, f, self.graphs, dep, b,
+                            na_executor=spec.na_executor,
+                            kernel_backend=spec.na_kernel_backend)
+
+                    self._forward_dep = jax.jit(fwd_dep)
+        out = self._forward_dep(params, features, betas, sub.arrays)
+        out = out[: sub.num_ids]
+        ids_arr = np.asarray(ids)
+        if (ids_arr.size == sub.num_ids
+                and np.array_equal(ids_arr, sub.node_ids)):
+            return out  # already sorted-unique (the serving union path)
+        return out[jnp.asarray(np.searchsorted(sub.node_ids, ids_arr))]
 
     def loss(self, params, features, labels, mask=None) -> jax.Array:
         """Masked cross-entropy on the target type (jitted).  ``mask=None``

@@ -114,6 +114,7 @@ class ExecutorSpec:
 
 
 _BACKPRESSURE = ("block", "reject")
+_SUBSET_MODES = ("head", "dependency")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,10 +126,23 @@ class ServePolicy:
     ``subset_threshold`` — when every queued request for a registration
     names explicit node ids and their union covers at most this fraction
     of the target vertices, the engine serves the group through one
-    compiled *subset forward* (``CompiledHGNN.forward_subset``: full
-    message passing, head + host transfer only over the union) instead of
-    the full-graph forward.  ``0.0`` disables subset serving; ``1.0``
-    always takes it when every request is explicit.
+    compiled *subset forward* instead of the full-graph forward.  ``0.0``
+    disables subset serving; ``1.0`` always takes it when every request
+    is explicit.
+
+    ``subset_mode`` — which subset forward serves such a group:
+    ``"head"`` (``CompiledHGNN.forward_subset``: full message passing,
+    head + host transfer only over the union) or ``"dependency"``
+    (``forward_subset(mode="dependency")``: message passing itself runs
+    over the union's k-hop dependency closure, so compute and peak live
+    arrays are bounded by the receptive field, not the graph).
+
+    ``dependency_threshold`` — the frontier-coverage fallback for
+    ``subset_mode="dependency"``: when the union's k-hop closure covers
+    more than this fraction of the graph's vertices (dense graphs blow
+    the closure up to nearly everything within a hop or two), the sliced
+    execution would pay full-graph compute plus slicing overhead, so the
+    group falls back to the plain full forward instead.
 
     ``bucket_min`` — smallest padded id-buffer bucket for the subset
     forward (buckets are powers of two, so resubmissions retrace only
@@ -148,6 +162,8 @@ class ServePolicy:
     """
 
     subset_threshold: float = 0.5
+    subset_mode: str = "head"
+    dependency_threshold: float = 0.75
     bucket_min: int = 8
     max_queue: int = 1024
     backpressure: str = "block"
@@ -158,6 +174,13 @@ class ServePolicy:
             raise ValueError(
                 f"subset_threshold must be in [0, 1], got "
                 f"{self.subset_threshold}")
+        if self.subset_mode not in _SUBSET_MODES:
+            raise ValueError(
+                f"subset_mode={self.subset_mode!r} not in {_SUBSET_MODES}")
+        if not 0.0 <= self.dependency_threshold <= 1.0:
+            raise ValueError(
+                f"dependency_threshold must be in [0, 1], got "
+                f"{self.dependency_threshold}")
         if self.bucket_min < 1:
             raise ValueError(f"bucket_min must be >= 1, got {self.bucket_min}")
         if self.max_queue < 1:

@@ -128,6 +128,25 @@ def na_attention_banded(
     return out
 
 
+def semantic_fusion_beta(
+    z_stack: jax.Array,  # (P, N, D) NA outputs per semantic graph
+    w: jax.Array,  # (D, D_att)
+    b: jax.Array,  # (D_att,)
+    q: jax.Array,  # (D_att,)
+) -> jax.Array:
+    """The (P,) semantic-attention weights of :func:`semantic_fusion`.
+
+    beta_p = softmax_p( mean_v q . tanh(W z_p,v + b) ).  The mean runs
+    over *all* rows of the type, which makes beta a graph-level statistic
+    (no per-row dependence) — the dependency-subset executor exploits
+    exactly this by freezing betas from one full calibration forward
+    (``HGNN.fusion_betas``) instead of re-deriving them from a partial
+    row set.
+    """
+    s = jnp.tanh(z_stack @ w + b) @ q  # (P, N)
+    return jax.nn.softmax(jnp.mean(s, axis=1))  # (P,)
+
+
 def semantic_fusion(
     z_stack: jax.Array,  # (P, N, D) NA outputs per semantic graph
     w: jax.Array,  # (D, D_att)
@@ -138,6 +157,5 @@ def semantic_fusion(
 
     beta_p = softmax_p( mean_v q . tanh(W z_p,v + b) ); out = sum_p beta_p z_p.
     """
-    s = jnp.tanh(z_stack @ w + b) @ q  # (P, N)
-    beta = jax.nn.softmax(jnp.mean(s, axis=1))  # (P,)
+    beta = semantic_fusion_beta(z_stack, w, b, q)
     return jnp.einsum("p,pnd->nd", beta, z_stack)

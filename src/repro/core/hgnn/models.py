@@ -14,7 +14,6 @@ Paper §5.3 configuration: hidden 64, layers {3: RGAT, 3: RGCN, 2: S-HGN}.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -27,14 +26,10 @@ from repro.core.hgnn.layers import (
     na_attention_banded,
     na_mean,
     na_mean_banded,
-    semantic_fusion,
+    semantic_fusion_beta,
 )
 from repro.hetero.graph import HetGraph, Relation
 from repro.kernels.seg_sum import PackedEdges
-
-# sentinel distinguishing "kwarg not passed" from an explicit value on the
-# deprecated apply/loss shims (explicit backend strings trigger the warning)
-_UNSET = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -234,9 +229,15 @@ class HGNN:
         *,
         na_executor: str = "jnp",
         kernel_backend: str = "interpret",
+        betas_out: Optional[List] = None,
     ) -> Dict[str, jax.Array]:
         """Run every FP -> NA -> SF layer; returns the final per-type
         hidden states (global vertex numbering), pre-classifier-head.
+
+        ``betas_out``, when given an empty list, collects one
+        ``{dst_type: (P_t + 1,)}`` dict of semantic-attention weights per
+        layer — the graph-level SF statistics the dependency-subset
+        executor freezes (see :meth:`fusion_betas`).
 
         This is the shared body of :meth:`execute` (full head) and
         :meth:`execute_subset` (head over a gathered row subset): message
@@ -322,17 +323,138 @@ class HGNN:
                 z_by_dst.setdefault(g.dst_type, []).append(z)
             # --- SF per destination type (+ self path for every type) ---
             h_next: Dict[str, jax.Array] = {}
+            layer_betas: Dict[str, jax.Array] = {}
             for t, x in hp.items():
                 sf = lp["sf"][t]
                 self_z = x @ sf["w_self"]
                 if t in z_by_dst:
                     stack = jnp.stack(z_by_dst[t] + [self_z])  # (P+1, N, D)
-                    h_next[t] = semantic_fusion(stack, sf["w"], sf["b"], sf["q"])
+                    beta = semantic_fusion_beta(stack, sf["w"], sf["b"],
+                                                sf["q"])
+                    layer_betas[t] = beta
+                    h_next[t] = jnp.einsum("p,pnd->nd", beta, stack)
+                else:
+                    h_next[t] = self_z
+            if betas_out is not None:
+                betas_out.append(layer_betas)
+            h = {t: jax.nn.relu(v) for t, v in h_next.items()}
+
+        return h
+
+    def fusion_betas(
+        self,
+        params: Dict,
+        features: Dict[str, jax.Array],
+        graphs: List[SemanticGraphBatch],
+        *,
+        na_executor: str = "jnp",
+        kernel_backend: str = "interpret",
+    ) -> List[Dict[str, jax.Array]]:
+        """Per-layer SF attention weights from one full forward.
+
+        Semantic fusion's beta is a mean over *all* rows of a type — a
+        graph-level statistic with no per-request dependence — so the
+        dependency-subset executor cannot re-derive it from a partial row
+        set and instead consumes these frozen values (recomputed only
+        when parameters or features change; serving recalibrates on
+        ``swap_params``).  Returns ``cfg.num_layers`` dicts keyed by
+        destination type, each ``(num_graphs_into_type + 1,)``.
+        """
+        betas: List[Dict[str, jax.Array]] = []
+        self.hidden_states(params, features, graphs,
+                           na_executor=na_executor,
+                           kernel_backend=kernel_backend,
+                           betas_out=betas)
+        return betas
+
+    def execute_dependency_subset(
+        self,
+        params: Dict,
+        features: Dict[str, jax.Array],
+        graphs: List[SemanticGraphBatch],
+        dep: Dict,
+        betas: List[Dict[str, jax.Array]],
+        *,
+        na_executor: str = "jnp",
+        kernel_backend: str = "interpret",
+    ) -> jax.Array:
+        """FP -> NA -> SF over an induced k-hop dependency subgraph.
+
+        ``dep`` is a ``core.subgraph.DependencySubset.arrays`` pytree for
+        the same graph/executor flavor as ``graphs`` (every array traced,
+        so requests sharing a bucket signature share one jit trace) and
+        ``betas`` the frozen SF weights from :meth:`fusion_betas` under
+        the same params/features.  Rows ``dep["node_rows"][:n]`` of the
+        result match the same target rows of :meth:`execute` to
+        reassociation tolerance: the closure keeps every edge into the
+        hop-``L-1`` frontier, so requested rows aggregate their full
+        receptive field while garbage on deeper-frontier rows only flows
+        into outputs nothing reads.
+        """
+        from repro.core.subgraph import (na_attention_subset_banded,
+                                         na_mean_subset_banded)
+
+        cfg = self.cfg
+        if na_executor not in ("jnp", "banded"):
+            raise ValueError(f"unknown na_executor {na_executor!r}")
+        if kernel_backend not in ("interpret", "pallas"):
+            raise ValueError(f"unknown kernel_backend {kernel_backend!r} "
+                             "(the banded path runs kernels only)")
+        banded = na_executor == "banded"
+        gather = dep["gather"]
+        h: Dict[str, jax.Array] = {}
+        for t in self.num_vertices:
+            rows = gather[t]
+            if self.feature_dims.get(t, 0) > 0:
+                h[t] = features[t][rows]
+            else:
+                h[t] = jnp.ones((rows.shape[0], 1), jnp.float32)
+
+        for li, lp in enumerate(params["layers"]):
+            hp = {
+                t: jax.nn.relu(feature_projection(lp["fp"][t]["w"],
+                                                  lp["fp"][t]["b"], x))
+                for t, x in h.items()
+            }
+            z_by_dst: Dict[str, List[jax.Array]] = {}
+            for g, dg in zip(graphs, dep["graphs"]):
+                na_p = lp["na"][g.metapath]
+                h_src = hp[g.src_type] @ na_p["w_rel"]
+                edge_bias = None
+                if cfg.model == "shgn":
+                    edge_bias = lp["edge_emb"][g.edge_type_id] @ lp["a_edge"]
+                if banded:
+                    if cfg.model == "rgcn":
+                        z = na_mean_subset_banded(
+                            g.packed, dg, h_src, backend=kernel_backend)
+                    else:
+                        z = na_attention_subset_banded(
+                            g.packed, dg, h_src, hp[g.dst_type],
+                            na_p["a_src"], na_p["a_dst"],
+                            edge_bias=edge_bias, backend=kernel_backend)
+                elif cfg.model == "rgcn":
+                    z = na_mean(h_src, dg["src"], dg["dst"],
+                                gather[g.dst_type].shape[0])
+                else:
+                    z = na_attention(
+                        h_src, hp[g.dst_type], dg["src"], dg["dst"],
+                        gather[g.dst_type].shape[0],
+                        na_p["a_src"], na_p["a_dst"], edge_bias=edge_bias)
+                z_by_dst.setdefault(g.dst_type, []).append(z)
+            h_next: Dict[str, jax.Array] = {}
+            for t, x in hp.items():
+                sf = lp["sf"][t]
+                self_z = x @ sf["w_self"]
+                if t in z_by_dst:
+                    stack = jnp.stack(z_by_dst[t] + [self_z])
+                    h_next[t] = jnp.einsum("p,pnd->nd", betas[li][t], stack)
                 else:
                     h_next[t] = self_z
             h = {t: jax.nn.relu(v) for t, v in h_next.items()}
 
-        return h
+        head = params["head"]
+        rows = h[cfg.target_type][dep["node_rows"]]
+        return rows @ head["w"] + head["b"]
 
     def execute(
         self,
@@ -348,8 +470,7 @@ class HGNN:
         This is the executor-dispatching implementation behind
         ``repro.api.CompiledHGNN.forward`` — callers should compile
         through a ``repro.api.Session``, which binds the batch flavor and
-        these kwargs once from an ``ExecutorSpec`` (the deprecated
-        ``apply`` shim below delegates here).  See :meth:`hidden_states`
+        these kwargs once from an ``ExecutorSpec``.  See :meth:`hidden_states`
         for the executor semantics (``na_executor``/``kernel_backend``)
         and differentiability notes shared with :meth:`execute_subset`.
         """
@@ -404,46 +525,6 @@ class HGNN:
         if mask is not None:
             return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
         return jnp.mean(nll)
-
-    # ------------------------------------------------- deprecated surface --
-    def _resolve_deprecated(self, na_backend, kernel_backend, method: str):
-        explicit = [name for name, value in
-                    (("na_backend", na_backend),
-                     ("kernel_backend", kernel_backend))
-                    if value is not _UNSET]
-        if explicit:
-            warnings.warn(
-                f"HGNN.{method}(..., {', '.join(explicit)}=...) is "
-                "deprecated: compile through repro.api.Session "
-                "(ExecutorSpec carries the executor choice) instead of "
-                "threading backend strings per call",
-                DeprecationWarning, stacklevel=3)
-        na = "jnp" if na_backend is _UNSET else na_backend
-        kb = "interpret" if kernel_backend is _UNSET else kernel_backend
-        return na, kb
-
-    def apply(self, params, features, graphs, na_backend=_UNSET,
-              kernel_backend=_UNSET) -> jax.Array:
-        """Deprecated shim over :meth:`execute` — same math, bitwise.
-
-        Passing ``na_backend``/``kernel_backend`` here warns; new code
-        gets a bound, no-kwargs ``forward`` from
-        ``repro.api.Session.compile``.
-        """
-        na, kb = self._resolve_deprecated(na_backend, kernel_backend,
-                                          "apply")
-        return self.execute(params, features, graphs, na_executor=na,
-                            kernel_backend=kb)
-
-    def loss(self, params, features, graphs, labels: jax.Array,
-             mask: Optional[jax.Array] = None, na_backend=_UNSET,
-             kernel_backend=_UNSET) -> jax.Array:
-        """Deprecated shim over :meth:`execute_loss` (see :meth:`apply`)."""
-        na, kb = self._resolve_deprecated(na_backend, kernel_backend,
-                                          "loss")
-        return self.execute_loss(params, features, graphs, labels,
-                                 mask=mask, na_executor=na,
-                                 kernel_backend=kb)
 
 
 def package_batches(

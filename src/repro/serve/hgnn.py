@@ -20,9 +20,14 @@ Serving has three layers:
   compiled forward (the node-classification analogue of continuous
   batching), and when every request in a group names explicit node ids
   whose union covers at most ``ServePolicy.subset_threshold`` of the
-  target vertices, the group is served by one *subset forward*
+  target vertices, the group is served by one *subset forward*: head-only
   (``CompiledHGNN.forward_subset`` — full message passing, classifier
-  head and host transfer only over the union of requested rows).
+  head and host transfer only over the union of requested rows) or, with
+  ``ServePolicy.subset_mode="dependency"``, the vertex-centric executor
+  (``forward_subset(mode="dependency")`` — message passing over the
+  union's k-hop dependency closure, compute and memory bounded by the
+  receptive field; falls back to the full forward when the closure covers
+  more than ``ServePolicy.dependency_threshold`` of the graph).
   Same-topology tenants run back-to-back so the session's cached frontend
   products stay hot.
 * **The loop** — ``run()`` drives ``step()`` from a background thread so
@@ -91,7 +96,8 @@ class HGNNResponse:
     lowers the compute share).  ``params_version`` is the registration's
     parameter version that produced the logits (see
     ``HGNNServeEngine.swap_params``), and ``mode`` records which forward
-    served the request (``"full"`` or ``"subset"``).
+    served the request (``"full"``, ``"subset"`` — head-only — or
+    ``"dependency"`` — k-hop-closure message passing).
 
     Example::
 
@@ -109,7 +115,7 @@ class HGNNResponse:
     queue_us: float = 0.0  # admission -> service start
     compute_us: float = 0.0  # service start -> completion
     params_version: int = 1  # registration's param version that served it
-    mode: str = "full"  # "full" | "subset" forward
+    mode: str = "full"  # "full" | "subset" | "dependency" forward
 
 
 @dataclasses.dataclass
@@ -182,6 +188,7 @@ class HGNNServeEngine:
         self._served = 0
         self._forwards_full = 0
         self._forwards_subset = 0
+        self._forwards_dependency = 0
         self._rejected = 0
         # bounded: a long-lived engine must not grow a per-request list
         # forever; percentiles come from the most recent window
@@ -283,6 +290,10 @@ class HGNNServeEngine:
         """
         single = isinstance(requests, HGNNRequest)
         reqs = [requests] if single else list(requests)
+        if not reqs:
+            # explicit no-op: nothing to validate, enqueue, or notify —
+            # an empty batch must not touch the lock or wake the loop
+            return []
         if len(reqs) > self.policy.max_queue:
             with self._lock:
                 self._rejected += len(reqs)
@@ -334,7 +345,8 @@ class HGNNServeEngine:
     def _serve_group(self, reg: _Registration, group: List[_Pending],
                      params: Dict, version: int) -> List[HGNNResponse]:
         """One compiled forward for every pending request of one
-        registration: the subset path when every request names ids whose
+        registration: a subset path (head-only or k-hop dependency, per
+        ``ServePolicy.subset_mode``) when every request names ids whose
         union coverage is within policy, the full-graph forward
         otherwise.  Exactly one device->host transfer and one gather per
         request either way."""
@@ -346,16 +358,29 @@ class HGNNServeEngine:
             coverage = union.size / max(1, reg.compiled.num_target)
             if coverage > self.policy.subset_threshold:
                 union = None
+        mode = "full"
         if union is not None:
             # union ids were canonicalized at admission; skip re-scanning
             # them inside the timed serving window
-            logits = reg.compiled.forward_subset(
-                params, reg.features, union,
-                bucket_min=self.policy.bucket_min, validate=False)
-            mode = "subset"
-        else:
+            if self.policy.subset_mode == "dependency":
+                sub = reg.compiled.dependency_subset(
+                    union, bucket_min=self.policy.bucket_min,
+                    validate=False)
+                if sub.coverage <= self.policy.dependency_threshold:
+                    logits = reg.compiled.forward_subset(
+                        params, reg.features, union,
+                        bucket_min=self.policy.bucket_min, validate=False,
+                        mode="dependency")
+                    mode = "dependency"
+                else:
+                    union = None  # closure blew up: full forward wins
+            else:
+                logits = reg.compiled.forward_subset(
+                    params, reg.features, union,
+                    bucket_min=self.policy.bucket_min, validate=False)
+                mode = "subset"
+        if union is None:
             logits = reg.compiled.forward(params, reg.features)
-            mode = "full"
         logits.block_until_ready()
         done = time.perf_counter()
         host_logits = np.asarray(logits)
@@ -389,6 +414,8 @@ class HGNNServeEngine:
             # direct caller concurrently with the background loop
             if mode == "subset":
                 self._forwards_subset += 1
+            elif mode == "dependency":
+                self._forwards_dependency += 1
             else:
                 self._forwards_full += 1
             for r in responses:
@@ -545,7 +572,8 @@ class HGNNServeEngine:
                     if deque_ else None)
 
         with self._lock:
-            forwards = self._forwards_full + self._forwards_subset
+            forwards = (self._forwards_full + self._forwards_subset
+                        + self._forwards_dependency)
             return {
                 "graphs_registered": len(self._registered),
                 "requests_served": self._served,
@@ -555,6 +583,7 @@ class HGNNServeEngine:
                 "forwards": forwards,
                 "forwards_full": self._forwards_full,
                 "forwards_subset": self._forwards_subset,
+                "forwards_dependency": self._forwards_dependency,
                 "batching_factor": self._served / max(1, forwards),
                 "latency_us_p50": _pct(self._latencies_us, 50),
                 "latency_us_p95": _pct(self._latencies_us, 95),

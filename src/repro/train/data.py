@@ -19,18 +19,23 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 def _hash_tokens(step: int, row: np.ndarray, seq: int, vocab: int,
                  seed: int) -> np.ndarray:
     """Counter-based generator (splitmix-ish), vectorized over rows."""
-    # (R, S) counters
-    ctr = (
-        np.uint64(seed) * np.uint64(0x9E3779B97F4A7C15)
-        + np.uint64(step) * np.uint64(0xBF58476D1CE4E5B9)
-        + row[:, None].astype(np.uint64) * np.uint64(0x94D049BB133111EB)
-        + np.arange(seq, dtype=np.uint64)[None, :]
-    )
-    z = ctr
-    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-    z = z ^ (z >> np.uint64(31))
-    return (z % np.uint64(vocab)).astype(np.int32)
+    # uint64 wraparound IS the splitmix mixing function — silence numpy's
+    # overflow RuntimeWarning for exactly this block (tier-1 runs with
+    # filterwarnings = error::RuntimeWarning, so an unscoped warning here
+    # would fail every training test)
+    with np.errstate(over="ignore"):
+        # (R, S) counters
+        ctr = (
+            np.uint64(seed) * np.uint64(0x9E3779B97F4A7C15)
+            + np.uint64(step) * np.uint64(0xBF58476D1CE4E5B9)
+            + row[:, None].astype(np.uint64) * np.uint64(0x94D049BB133111EB)
+            + np.arange(seq, dtype=np.uint64)[None, :]
+        )
+        z = ctr
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+        return (z % np.uint64(vocab)).astype(np.int32)
 
 
 @dataclasses.dataclass

@@ -1,6 +1,6 @@
 """repro.api execution sessions: spec validation, compile-once reuse,
-jnp/banded parity through one Session, deprecated-shim equivalence, and
-the multi-tenant HGNNServeEngine."""
+jnp/banded parity through one Session, and the multi-tenant
+HGNNServeEngine."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -184,57 +184,6 @@ def test_compile_memoizes_identical_requests(sessions):
     b = sess.compile(graph, list(reversed(targets)), cfg)
     assert a is b  # target order is not identity
     assert sess.stats().compiles_cached == before + 1
-
-
-# --------------------------------------------------- deprecated surface --
-def test_deprecated_apply_warns_and_matches_bitwise(sessions):
-    """HGNN.apply(..., na_backend=...) still works for seed callers, but
-    warns — and, traced the same way, is bitwise-identical to the
-    compiled forward."""
-    for exec_name in ("jnp", "banded"):
-        sess = sessions[exec_name]
-        graph = sessions["graphs"]["acm_small"]
-        targets, target_type = WORKLOADS["acm_small"]
-        c = sess.compile(graph, targets, _cfg("rgat", target_type))
-        params = c.init(0)
-        feats = device_features(graph)
-        with pytest.warns(DeprecationWarning, match="repro.api.Session"):
-            legacy = jax.jit(
-                lambda p, f: c.model.apply(p, f, c.graphs,
-                                           na_backend=exec_name))(
-                params, feats)
-        np.testing.assert_array_equal(np.asarray(legacy),
-                                      np.asarray(c.forward(params, feats)))
-
-
-def test_deprecated_loss_warns_and_matches(sessions):
-    sess = sessions["jnp"]
-    graph = sessions["graphs"]["acm_small"]
-    targets, target_type = WORKLOADS["acm_small"]
-    c = sess.compile(graph, targets, _cfg("rgcn", target_type))
-    params = c.init(0)
-    feats = device_features(graph)
-    labels = jnp.zeros((c.num_target,), jnp.int32)
-    with pytest.warns(DeprecationWarning):
-        legacy = c.model.loss(params, feats, c.graphs, labels,
-                              na_backend="jnp")
-    np.testing.assert_allclose(float(legacy),
-                               float(c.loss(params, feats, labels)),
-                               rtol=1e-6)
-
-
-def test_default_apply_does_not_warn(sessions):
-    """Only explicit backend kwargs are deprecated; the bare two-arg
-    apply stays quiet (it is the documented jnp default)."""
-    import warnings
-
-    sess = sessions["jnp"]
-    graph = sessions["graphs"]["acm_small"]
-    targets, target_type = WORKLOADS["acm_small"]
-    c = sess.compile(graph, targets, _cfg("rgcn", target_type))
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        c.model.apply(c.init(0), device_features(graph), c.graphs)
 
 
 # ------------------------------------------------------- model lifecycle --

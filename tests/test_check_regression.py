@@ -35,6 +35,12 @@ TRAIN_POINT = {
     "datasets": {"ACM": {"latency_ratio_banded_vs_jnp": 3.0}},
 }
 
+PIPELINE_POINT = {
+    "schema": "pipeline_bench/v1",
+    "scale": 0.15,
+    "serve": {"subset_vs_full": 0.9, "dependency_vs_full": 1.2},
+}
+
 
 def test_extract_metrics_gfp():
     m = extract_metrics(GFP_POINT)
@@ -42,8 +48,18 @@ def test_extract_metrics_gfp():
     assert m["gfp/ACM/hbm/PAP/tile_ratio"] == pytest.approx(0.5)
     assert extract_metrics(TRAIN_POINT) == {
         "train/ACM/latency_ratio": pytest.approx(3.0)}
+    assert extract_metrics(PIPELINE_POINT) == {
+        "serve/subset_vs_full": pytest.approx(0.9),
+        "serve/dependency_vs_full": pytest.approx(1.2)}
     with pytest.raises(ValueError):
         extract_metrics({"schema": "mystery/v9"})
+
+
+def test_gate_fires_on_serve_ratio_regression():
+    worse = copy.deepcopy(PIPELINE_POINT)
+    worse["serve"]["subset_vs_full"] = 1.8
+    failures = compare(PIPELINE_POINT, worse, tolerance=0.5)
+    assert len(failures) == 1 and "serve/subset_vs_full" in failures[0]
 
 
 def test_gate_fires_on_2x_slower_point():

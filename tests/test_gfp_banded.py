@@ -48,7 +48,7 @@ def frontends(request, acm_small, imdb_small):
 @pytest.mark.parametrize("ds", sorted(WORKLOADS))
 @pytest.mark.parametrize("model", ["rgcn", "rgat", "shgn"])
 def test_banded_matches_jnp(frontends, ds, model):
-    """HGNN.apply on the banded Pallas path reproduces the segment-sum
+    """HGNN.execute on the banded Pallas path reproduces the segment-sum
     path to fp tolerance for every model on ACM and IMDB."""
     graph, res, target_type = frontends[ds]
     targets = WORKLOADS[ds][0]
@@ -57,9 +57,9 @@ def test_banded_matches_jnp(frontends, ds, model):
                      target_type=target_type)
     m = HGNN(cfg, graph.feature_dims, graph.num_vertices, sorted(targets))
     params = m.init(jax.random.key(0))
-    logits_jnp = m.apply(params, feats, res.batches())
-    logits_banded = m.apply(params, feats, res.banded_batches(),
-                            na_backend="banded")
+    logits_jnp = m.execute(params, feats, res.batches())
+    logits_banded = m.execute(params, feats, res.banded_batches(),
+                              na_executor="banded")
     assert not jnp.isnan(logits_banded).any()
     np.testing.assert_allclose(np.asarray(logits_jnp),
                                np.asarray(logits_banded), atol=1e-4)
@@ -91,13 +91,13 @@ def test_packed_built_once_and_shared(frontends):
                              num_classes=3, target_type=target_type)
             m = HGNN(cfg, graph.feature_dims, graph.num_vertices,
                      sorted(targets))
-            m.apply(m.init(jax.random.key(1)), feats, banded,
-                    na_backend="banded").block_until_ready()
+            m.execute(m.init(jax.random.key(1)), feats, banded,
+                      na_executor="banded").block_until_ready()
     finally:
         seg_sum_mod.pack_edge_blocks = orig
 
 
-def test_apply_rejects_mismatched_batches(frontends):
+def test_execute_rejects_mismatched_batches(frontends):
     graph, res, target_type = frontends["acm_small"]
     targets = WORKLOADS["acm_small"][0]
     feats = {t: jnp.asarray(x) for t, x in graph.features.items()}
@@ -106,11 +106,11 @@ def test_apply_rejects_mismatched_batches(frontends):
     m = HGNN(cfg, graph.feature_dims, graph.num_vertices, sorted(targets))
     params = m.init(jax.random.key(0))
     with pytest.raises(TypeError):
-        m.apply(params, feats, res.batches(), na_backend="banded")
+        m.execute(params, feats, res.batches(), na_executor="banded")
     with pytest.raises(TypeError):
-        m.apply(params, feats, res.banded_batches())
+        m.execute(params, feats, res.banded_batches())
     with pytest.raises(ValueError):
-        m.apply(params, feats, res.batches(), na_backend="spam")
+        m.execute(params, feats, res.batches(), na_executor="spam")
 
 
 def test_banded_batches_need_restructure(acm_small):
@@ -258,7 +258,7 @@ def test_weighted_packing_keeps_zero_weight_edges_in_softmax():
         pack_edge_blocks(src, dst, ns, nd).valid_weight())
 
 
-def test_apply_rejects_unknown_kernel_backend(frontends):
+def test_execute_rejects_unknown_kernel_backend(frontends):
     graph, res, target_type = frontends["acm_small"]
     targets = WORKLOADS["acm_small"][0]
     feats = {t: jnp.asarray(x) for t, x in graph.features.items()}
@@ -267,8 +267,8 @@ def test_apply_rejects_unknown_kernel_backend(frontends):
     m = HGNN(cfg, graph.feature_dims, graph.num_vertices, sorted(targets))
     params = m.init(jax.random.key(0))
     with pytest.raises(ValueError):
-        m.apply(params, feats, res.banded_batches(), na_backend="banded",
-                kernel_backend="jnp")
+        m.execute(params, feats, res.banded_batches(),
+                  na_executor="banded", kernel_backend="jnp")
 
 
 def test_hbm_feature_bytes_fp32_default():

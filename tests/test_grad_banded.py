@@ -55,7 +55,7 @@ def _random_stream(ns, nd, ne, seed):
 @pytest.mark.parametrize("ds", sorted(WORKLOADS))
 @pytest.mark.parametrize("model", ["rgcn", "rgat", "shgn"])
 def test_loss_grads_match_jnp(frontends, ds, model):
-    """jax.grad(m.loss) on the banded executor == the jnp executor to
+    """jax.grad of execute_loss on the banded executor == the jnp executor to
     1e-4 for every parameter (including the attention vectors a_src /
     a_dst and the Simple-HGN edge-type embedding) AND the input
     features."""
@@ -71,8 +71,8 @@ def test_loss_grads_match_jnp(frontends, ds, model):
     params = m.init(jax.random.key(2))
 
     def loss_fn(backend, graphs):
-        return lambda p, f: m.loss(p, f, graphs, labels, mask=mask,
-                                   na_backend=backend)
+        return lambda p, f: m.execute_loss(p, f, graphs, labels, mask=mask,
+                                           na_executor=backend)
 
     g_jnp = jax.grad(loss_fn("jnp", res.batches()), argnums=(0, 1))(
         params, feats)
@@ -100,8 +100,9 @@ def test_attention_param_grads_nonzero(frontends):
                      target_type=target_type)
     m = HGNN(cfg, graph.feature_dims, graph.num_vertices, sorted(targets))
     params = m.init(jax.random.key(3))
-    grads = jax.grad(lambda p: m.loss(p, feats, res.banded_batches(),
-                                      labels, na_backend="banded"))(params)
+    grads = jax.grad(
+        lambda p: m.execute_loss(p, feats, res.banded_batches(), labels,
+                                 na_executor="banded"))(params)
     # only PAP/PSP can influence the P-type head in this workload (APA is
     # A -> A, and nothing live consumes h[A]); their attention params must
     # get gradients in EVERY layer — a stop_gradient hole anywhere in the

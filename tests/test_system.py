@@ -33,8 +33,8 @@ def test_full_pipeline_all_models(acm_small):
                          num_classes=3, target_type="P")
         m = HGNN(cfg, g.feature_dims, g.num_vertices, sorted(targets))
         params = m.init(jax.random.key(0))
-        logits_o = m.apply(params, feats, graphs_from_sgb(g, res.graphs, targets))
-        logits_r = m.apply(params, feats, shared)
+        logits_o = m.execute(params, feats, graphs_from_sgb(g, res.graphs, targets))
+        logits_r = m.execute(params, feats, shared)
         assert logits_o.shape == (g.num_vertices["P"], 3)
         assert not jnp.isnan(logits_o).any()
         np.testing.assert_allclose(logits_o, logits_r, atol=1e-4)
@@ -57,8 +57,9 @@ def test_hgnn_training_converges(imdb_small):
     from repro.train.optim import adamw_init, adamw_update
 
     opt = adamw_init(params)
-    loss_fn = jax.jit(lambda p: m.loss(p, feats, graphs, labels))
-    grad_fn = jax.jit(jax.grad(lambda p: m.loss(p, feats, graphs, labels)))
+    loss_fn = jax.jit(lambda p: m.execute_loss(p, feats, graphs, labels))
+    grad_fn = jax.jit(jax.grad(
+        lambda p: m.execute_loss(p, feats, graphs, labels)))
     l0 = float(loss_fn(params))
     for _ in range(15):
         grads = grad_fn(params)
