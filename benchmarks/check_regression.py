@@ -12,7 +12,10 @@ the CI runner:
                   semantic graph (deterministic);
   train_bench/v1  banded-vs-jnp per-epoch latency ratio per dataset;
   pipeline_bench/v1  serving subset-vs-full latency ratios (head-only
-                  and k-hop dependency mode) for the same request queue.
+                  and k-hop dependency mode) for the same request queue,
+                  plus the chaos round's unrecovered-request fraction
+                  (``serve/chaos_unrecovered``, baseline 0.0 — a zero
+                  baseline means *any* unrecovered request regresses).
 
 Scale adjustment: ratio metrics are only meaningful between points of
 the same ``scale`` (tiny graphs fit one source band, so e.g. the tile
@@ -61,9 +64,11 @@ def extract_metrics(point: Dict) -> Dict[str, float]:
     elif schema.startswith("pipeline_bench/"):
         # serving latency ratios vs the full-graph forward round
         # (subset_vs_full, dependency_vs_full); lower is better, < 1.0
-        # means the subset path beats paying for the whole graph
+        # means the subset path beats paying for the whole graph.
+        # `is not None`, not truthiness: chaos_unrecovered's baseline is
+        # a legitimate 0.0 and must stay tracked so any regression fails
         for k, r in point.get("serve", {}).items():
-            if r:
+            if r is not None:
                 metrics[f"serve/{k}"] = r
     else:
         raise ValueError(f"unknown bench schema {schema!r}")
@@ -112,10 +117,11 @@ def compare(baseline: Dict, candidate: Dict, tolerance: float) -> List[str]:
             failures.append(f"{name}: missing from candidate (baseline {b:.3f})")
             continue
         if c > b * (1.0 + tolerance):
-            growth = (c / b - 1) * 100
-            failures.append(
-                f"{name}: {c:.3f} vs baseline {b:.3f} (+{growth:.0f}% > {tolerance * 100:.0f}%)"
-            )
+            if b > 0:
+                growth = f"+{(c / b - 1) * 100:.0f}% > {tolerance * 100:.0f}%"
+            else:
+                growth = "baseline 0.0 admits no regression"
+            failures.append(f"{name}: {c:.3f} vs baseline {b:.3f} ({growth})")
     return failures
 
 

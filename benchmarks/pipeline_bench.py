@@ -23,12 +23,20 @@ Reports, per dataset/workload:
                        admission loop) round, and the session's
                        warm-cache hit-rate.
 
+The serve section ends with a ``serve/degraded_batch`` chaos round: the
+same queue served under injected transient faults (``FaultInjector``),
+two deterministically expired deadlines, and queue pressure past the
+degradation threshold — its derived column reports
+retries/recovered/shed/unrecovered/degraded-step counts.
+
 With a second positional argument the serve section's dimensionless
 ratios are also written as a ``pipeline_bench/v1`` JSON point for the
 regression gate (``check_regression.py``): ``subset_vs_full`` and
 ``dependency_vs_full`` are timed-round-vs-full-round latency ratios
 (lower is better; < 1.0 means the subset path beats paying for the
-whole graph).
+whole graph), and ``chaos_unrecovered`` is the chaos round's fraction
+of admitted requests that resolved to neither a response nor a
+deadline shed (baseline 0.0 — any regression fails the gate).
 
 Run:  PYTHONPATH=src:. python benchmarks/pipeline_bench.py [scale] [out.json]
 """
@@ -45,7 +53,8 @@ from benchmarks.common import row
 from repro.api import ExecutorSpec, ServePolicy, Session
 from repro.core.hgnn import HGNNConfig
 from repro.pipeline import FrontendPipeline, PipelineConfig, SemanticGraphCache
-from repro.serve import HGNNRequest, HGNNServeEngine
+from repro.serve import (DeadlineExceeded, FaultInjector, HGNNRequest,
+                         HGNNServeEngine, TransientFault)
 
 WORKLOADS = {
     "ACM": ["APA", "PAP", "PSP", "APSPA"],
@@ -116,11 +125,11 @@ SERVE_TENANTS = [
 SERVE_REQUESTS = 24
 
 
-def _make_engine(session: Session, policy: ServePolicy,
-                 scale: float) -> HGNNServeEngine:
+def _make_engine(session: Session, policy: ServePolicy, scale: float,
+                 faults=None) -> HGNNServeEngine:
     from repro.pipeline.frontend import _dataset
 
-    engine = HGNNServeEngine(session=session, policy=policy)
+    engine = HGNNServeEngine(session=session, policy=policy, faults=faults)
     for name, ds, targets, target_type, model in SERVE_TENANTS:
         graph = _dataset(ds, 0, float(scale))
         engine.register(name, graph, targets, HGNNConfig(
@@ -236,6 +245,47 @@ def bench_serving(scale: float = 0.25) -> Tuple[List[str], Dict[str, float]]:
         "serve/async_batch", async_us,
         f"queue_p50={q_p50:.0f};compute_p50={c_p50:.0f};"
         f"batching={len(responses) / max(1, forwards):.1f}"))
+
+    # --- chaos round: the same queue under injected transient faults,
+    # deterministic deadline sheds, and degradation pressure.  Two
+    # requests arrive already expired (shed at submit), the queue fills
+    # past ServePolicy.degrade_pressure (dependency groups degrade to the
+    # head-only subset forward), and the injector fails the first three
+    # compiled forwards (absorbed by retry-with-backoff).  Every admitted
+    # request must still resolve: chaos_unrecovered is the fraction that
+    # did not — 0.0 is the baseline the regression gate holds ---
+    inj = FaultInjector(seed=0).inject(
+        "forward", exc=TransientFault("chaos: injected"), times=3)
+    eng_chaos = _make_engine(
+        session,
+        ServePolicy(subset_threshold=0.5, subset_mode="dependency",
+                    dependency_threshold=1.0, max_queue=SERVE_REQUESTS,
+                    max_retries=3, retry_backoff_ms=1.0,
+                    deadline_ms=600_000.0),
+        scale, faults=inj)
+    reqs = _requests()
+    for r in reqs[:2]:
+        r.deadline_ms = 0.0  # deterministically expired at submit
+    futures = eng_chaos.submit(reqs)
+    t0 = time.perf_counter()
+    eng_chaos.step()
+    chaos_us = (time.perf_counter() - t0) * 1e6
+    recovered = unrecovered = shed = 0
+    for f in futures:
+        exc = f.exception()
+        if exc is None:
+            recovered += 1
+        elif isinstance(exc, DeadlineExceeded):
+            shed += 1
+        else:
+            unrecovered += 1
+    s = eng_chaos.stats()
+    metrics["chaos_unrecovered"] = unrecovered / len(reqs)
+    out.append(row(
+        "serve/degraded_batch", chaos_us,
+        f"retries={s['retries']};recovered={recovered};"
+        f"shed_deadline={shed};unrecovered={unrecovered};"
+        f"degraded_steps={s['degraded_steps']}"))
     return out, metrics
 
 

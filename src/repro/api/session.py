@@ -406,16 +406,30 @@ class CompiledHGNN:
 
     def fit(self, features, labels, masks, *, epochs: int = 100,
             seed: int = 0, lr: float = 3e-3, weight_decay: float = 0.0,
-            epoch_callback=None) -> Dict:
+            epoch_callback=None, ckpt_dir: Optional[str] = None,
+            ckpt_every: int = 1) -> Dict:
         """Full-graph semi-supervised training on the bound executor
         (delegates to ``train.hgnn_step.fit`` — jitted AdamW step, custom
-        VJPs on the banded path — with the spec threaded through)."""
+        VJPs on the banded path — with the spec threaded through).
+
+        ``ckpt_dir`` turns on atomic train-state checkpointing every
+        ``ckpt_every`` epochs (``train.checkpoint.CheckpointManager``); a
+        re-run over the same directory resumes from the latest complete
+        checkpoint instead of epoch 0 — crash-mid-save leaves no
+        restorable garbage.
+
+        Example::
+
+            out = compiled.fit(feats, labels, masks, epochs=50,
+                               ckpt_dir="/ckpts/acm", ckpt_every=10)
+        """
         from repro.train.hgnn_step import fit as _fit
 
         return _fit(self.model, self.graphs, features, labels, masks,
                     epochs=epochs, seed=seed, lr=lr,
                     weight_decay=weight_decay, executor=self.spec,
-                    epoch_callback=epoch_callback)
+                    epoch_callback=epoch_callback, ckpt_dir=ckpt_dir,
+                    ckpt_every=ckpt_every)
 
 
 class Session:

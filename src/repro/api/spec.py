@@ -24,6 +24,7 @@ see the pack flag or the batch flavor again.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 from repro.pipeline.frontend import PipelineConfig
@@ -153,12 +154,47 @@ class ServePolicy:
     loop to drain capacity, ``"reject"`` raises ``AdmissionError``
     immediately (shed load at the edge).
 
+    ``deadline_ms`` — the default per-request latency SLO: a request
+    whose deadline expires before its group enters a compiled forward
+    fails fast with ``DeadlineExceeded`` instead of riding (and
+    slowing) a batch whose result nobody will use.  ``None`` disables
+    deadlines; ``HGNNRequest.deadline_ms`` overrides per request.
+
+    ``tenant_rate`` / ``tenant_burst`` — per-registration token-bucket
+    admission: each tenant refills at ``tenant_rate`` requests/second up
+    to ``tenant_burst`` tokens (default ``max(1, ceil(rate))``), and a
+    submit without tokens raises ``QuotaExceeded`` — a hot tenant sheds
+    its *own* load instead of filling the shared queue.  ``None``
+    disables quotas.
+
+    ``max_retries`` / ``retry_backoff_ms`` / ``retry_backoff_cap_ms`` —
+    the recovery ladder's retry rung: a serve-group failure classified
+    *transient* (``repro.serve.faults.is_transient``) is retried up to
+    ``max_retries`` times with capped exponential backoff
+    (``min(cap, base * 2**attempt)``); permanent failures fail the
+    group's futures immediately.
+
+    ``breaker_threshold`` / ``breaker_cooldown_ms`` — the per-
+    registration circuit breaker: ``breaker_threshold`` *consecutive*
+    serve failures open the breaker (requests fail fast with
+    ``CircuitOpen``, no forward attempted); after
+    ``breaker_cooldown_ms`` one probe group is let through — success
+    closes the breaker, failure re-opens it.  ``swap_params`` resets
+    the breaker (new parameters deserve a fresh chance).
+
+    ``degrade_pressure`` — the ladder's degradation rung: when a drained
+    queue's fill fraction reaches this threshold and ``subset_mode`` is
+    ``"dependency"``, eligible groups are served through the cheaper
+    head-only subset forward for that step (no host-side closure
+    extraction) — the engine degrades before it sheds.
+
     Example::
 
         engine = HGNNServeEngine(
             spec=ExecutorSpec(),
             policy=ServePolicy(subset_threshold=0.25, max_queue=256,
-                               backpressure="reject"))
+                               backpressure="reject", deadline_ms=500.0,
+                               tenant_rate=100.0, tenant_burst=20))
     """
 
     subset_threshold: float = 0.5
@@ -167,6 +203,15 @@ class ServePolicy:
     bucket_min: int = 8
     max_queue: int = 1024
     backpressure: str = "block"
+    deadline_ms: Optional[float] = None
+    tenant_rate: Optional[float] = None
+    tenant_burst: Optional[int] = None
+    max_retries: int = 2
+    retry_backoff_ms: float = 25.0
+    retry_backoff_cap_ms: float = 1000.0
+    breaker_threshold: int = 5
+    breaker_cooldown_ms: float = 500.0
+    degrade_pressure: float = 0.8
 
     def __post_init__(self):
         """Validate every knob at construction (fail fast, like the spec)."""
@@ -188,3 +233,49 @@ class ServePolicy:
         if self.backpressure not in _BACKPRESSURE:
             raise ValueError(
                 f"backpressure={self.backpressure!r} not in {_BACKPRESSURE}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0 (or None to disable), got "
+                f"{self.deadline_ms}")
+        if self.tenant_rate is not None and self.tenant_rate < 0:
+            raise ValueError(
+                f"tenant_rate must be >= 0 (or None to disable), got "
+                f"{self.tenant_rate}")
+        if self.tenant_burst is not None:
+            if self.tenant_rate is None:
+                raise ValueError(
+                    "tenant_burst without tenant_rate: set tenant_rate "
+                    "(0 is legal — burst-only admission) to enable quotas")
+            if self.tenant_burst < 1:
+                raise ValueError(
+                    f"tenant_burst must be >= 1, got {self.tenant_burst}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff_ms < 0:
+            raise ValueError(
+                f"retry_backoff_ms must be >= 0, got {self.retry_backoff_ms}")
+        if self.retry_backoff_cap_ms < self.retry_backoff_ms:
+            raise ValueError(
+                f"retry_backoff_cap_ms ({self.retry_backoff_cap_ms}) must "
+                f"be >= retry_backoff_ms ({self.retry_backoff_ms})")
+        if self.breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got "
+                f"{self.breaker_threshold}")
+        if self.breaker_cooldown_ms < 0:
+            raise ValueError(
+                f"breaker_cooldown_ms must be >= 0, got "
+                f"{self.breaker_cooldown_ms}")
+        if not 0.0 < self.degrade_pressure <= 1.0:
+            raise ValueError(
+                f"degrade_pressure must be in (0, 1], got "
+                f"{self.degrade_pressure}")
+
+    @property
+    def effective_burst(self) -> int:
+        """The resolved token-bucket capacity when quotas are enabled:
+        ``tenant_burst`` if set, else ``max(1, ceil(tenant_rate))``."""
+        if self.tenant_burst is not None:
+            return self.tenant_burst
+        return max(1, math.ceil(self.tenant_rate or 0.0))

@@ -1,9 +1,36 @@
 """Serving substrate: the LM KV-cache engine (batched prefill/decode) and
-the async multi-tenant HGNN engine over compiled ``repro.api`` sessions."""
-from repro.serve.engine import ServeEngine, Request
-from repro.serve.hgnn import (AdmissionError, HGNNRequest, HGNNResponse,
-                              HGNNServeEngine)
+the async multi-tenant HGNN engine over compiled ``repro.api`` sessions,
+plus the serving-tier failure taxonomy and fault injector."""
 
-__all__ = ["ServeEngine", "Request",
-           "AdmissionError", "HGNNRequest", "HGNNResponse",
-           "HGNNServeEngine"]
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.faults import (
+    FaultInjector,
+    PermanentFault,
+    TransientFault,
+    is_transient,
+)
+from repro.serve.hgnn import (
+    AdmissionError,
+    CircuitOpen,
+    DeadlineExceeded,
+    HGNNRequest,
+    HGNNResponse,
+    HGNNServeEngine,
+    QuotaExceeded,
+)
+
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "AdmissionError",
+    "QuotaExceeded",
+    "DeadlineExceeded",
+    "CircuitOpen",
+    "HGNNRequest",
+    "HGNNResponse",
+    "HGNNServeEngine",
+    "FaultInjector",
+    "TransientFault",
+    "PermanentFault",
+    "is_transient",
+]

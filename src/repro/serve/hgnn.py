@@ -35,9 +35,42 @@ Serving has three layers:
   ``swap_params()`` atomically installs freshly trained parameters into a
   live registration, bumping a version stamped on every response.
 
+On top of those sits the **fault-tolerance layer** — the invariant it
+maintains is *an admitted request's future always resolves*: to a
+response, a ``DeadlineExceeded``, or the classified serving error.
+
+* **Deadlines** — every request carries a latency SLO
+  (``HGNNRequest.deadline_ms``, defaulting to
+  ``ServePolicy.deadline_ms``).  A deadline already expired at ``submit``
+  fails its future immediately; ``step()`` re-checks remaining budget
+  when forming (and retrying) groups, so a stale request never rides —
+  and never slows — a batch whose result nobody will use.
+* **Per-tenant quotas** — token-bucket admission per registration
+  (``ServePolicy.tenant_rate``/``tenant_burst``): a hot tenant runs out
+  of tokens and gets ``QuotaExceeded`` at the edge instead of filling
+  the shared queue and starving every other registration.
+* **Retry + circuit breaker** — a serve-group failure is classified
+  transient vs permanent (``serve/faults.py``); transient failures are
+  retried with capped exponential backoff, and ``breaker_threshold``
+  consecutive failures open a per-registration circuit breaker that
+  fails the tenant's requests fast (``CircuitOpen``) until a cooldown
+  probe succeeds — a tenant with broken hot-swapped params stops
+  burning ``step()`` time.
+* **Degradation ladder** — under queue pressure
+  (``ServePolicy.degrade_pressure``) the engine first *degrades*
+  (dependency-mode subset groups are served through the cheaper
+  head-only forward) before it *sheds* (quota/backpressure rejections).
+* **Fault injection** — a ``FaultInjector`` (``serve/faults.py``) can be
+  threaded through the engine (no-op default) to raise scripted or
+  probabilistic exceptions — and inject latency — at the named sites
+  ``extract``/``forward``/``host_transfer``; the chaos suite
+  (``tests/test_serve_faults.py``) drives every recovery path through
+  it.
+
 Every response carries its queueing and compute latency separately;
 ``stats()`` reports batching factors, subset-vs-full forward counts,
-latency percentiles, and the session's warm-cache hit rate.
+latency percentiles, per-tenant served/rejected/deadline splits,
+breaker states, and the session's warm-cache hit rate.
 """
 from __future__ import annotations
 
@@ -55,6 +88,7 @@ from repro.api.session import (CompiledHGNN, Session, canonical_node_ids,
 from repro.api.spec import ExecutorSpec, ServePolicy
 from repro.core.hgnn.models import HGNNConfig
 from repro.hetero.graph import HetGraph
+from repro.serve.faults import FaultInjector, is_transient
 
 
 class AdmissionError(RuntimeError):
@@ -70,20 +104,151 @@ class AdmissionError(RuntimeError):
     """
 
 
+class QuotaExceeded(AdmissionError):
+    """Raised by ``submit`` when a tenant's token bucket is empty
+    (``ServePolicy.tenant_rate``/``tenant_burst``): the hot tenant sheds
+    its own load at the edge; the shared queue — and every other
+    tenant — is untouched.
+
+    Example::
+
+        try:
+            engine.submit(req)
+        except QuotaExceeded:
+            ...  # this tenant is over its rate; back off
+    """
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request's latency SLO expired before its group entered a
+    compiled forward.  Delivered through the request's future — at
+    ``submit`` when the deadline is already gone, or at group formation
+    inside ``step()`` (a stale request never rides a batch).
+
+    Example::
+
+        fut = engine.submit(HGNNRequest(0, "acm", nodes=ids,
+                                        deadline_ms=50.0))
+        try:
+            resp = fut.result(timeout=30)
+        except DeadlineExceeded:
+            ...  # shed: re-submit with a fresh budget or give up
+    """
+
+
+class CircuitOpen(RuntimeError):
+    """A registration's circuit breaker is open: ``breaker_threshold``
+    consecutive serve failures tripped it, and the cooldown probe has
+    not yet succeeded.  Requests for that registration fail fast with
+    this error — no forward is attempted — while every other tenant
+    keeps serving.
+
+    Example::
+
+        try:
+            fut.result(timeout=30)
+        except CircuitOpen:
+            engine.swap_params("acm", good_params)  # also resets the breaker
+    """
+
+
+class _TokenBucket:
+    """Per-registration admission quota (engine-lock-guarded)."""
+
+    __slots__ = ("rate", "burst", "tokens", "stamp")
+
+    def __init__(self, rate: float, burst: int, now: float):
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)  # starts full: burst-first semantics
+        self.stamp = now
+
+    def refill(self, now: float) -> None:
+        self.tokens = min(self.burst,
+                          self.tokens + (now - self.stamp) * self.rate)
+        self.stamp = now
+
+    def take(self, n: int) -> None:
+        self.tokens -= n
+
+
+class _Breaker:
+    """Per-registration circuit breaker (engine-lock-guarded).
+
+    States: ``closed`` (serving normally) -> ``open`` (threshold
+    consecutive failures; fail fast) -> ``half_open`` (cooldown elapsed;
+    exactly one probe group allowed) -> ``closed`` on probe success or
+    back to ``open`` on probe failure.
+    """
+
+    __slots__ = ("state", "consecutive", "opened_at", "last_error")
+
+    def __init__(self):
+        self.state = "closed"
+        self.consecutive = 0
+        self.opened_at = 0.0
+        self.last_error: Optional[BaseException] = None
+
+    def allow(self, now: float, cooldown_s: float) -> bool:
+        """Whether a serve attempt may proceed (transitions open ->
+        half_open when the cooldown has elapsed: the probe)."""
+        if self.state == "closed":
+            return True
+        if self.state == "open" and now - self.opened_at >= cooldown_s:
+            self.state = "half_open"
+            return True  # the one probe
+        return False  # open (cooling down) or a probe already in flight
+
+    def record_success(self) -> None:
+        self.state = "closed"
+        self.consecutive = 0
+        self.last_error = None
+
+    def record_failure(self, exc: BaseException, threshold: int,
+                       now: float) -> None:
+        self.consecutive += 1
+        self.last_error = exc
+        if self.state == "half_open" or self.consecutive >= threshold:
+            self.state = "open"
+            self.opened_at = now
+
+
+@dataclasses.dataclass
+class _TenantStats:
+    """Per-registration serving counters (engine-lock-guarded)."""
+
+    submitted: int = 0
+    served: int = 0
+    rejected_quota: int = 0
+    deadline_exceeded: int = 0
+    failures: int = 0
+    retries: int = 0
+    breaker_fastfails: int = 0
+
+
 @dataclasses.dataclass
 class HGNNRequest:
     """One inference request: classify ``nodes`` (target-type vertex ids)
     of a registered graph.  ``nodes=None`` asks for every target vertex.
 
+    ``deadline_ms`` is the request's latency SLO measured from
+    admission (``None`` falls back to ``ServePolicy.deadline_ms``): if
+    it expires before the request's group enters a compiled forward,
+    the future fails with :class:`DeadlineExceeded` instead of riding a
+    batch.  A value <= 0 is already expired at ``submit`` and fails
+    fast there.
+
     Example::
 
         engine.submit(HGNNRequest(rid=0, graph="acm",
-                                  nodes=np.array([3, 14, 15])))
+                                  nodes=np.array([3, 14, 15]),
+                                  deadline_ms=500.0))
     """
 
     rid: int
     graph: str  # registration name
     nodes: Optional[np.ndarray] = None
+    deadline_ms: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -126,6 +291,9 @@ class _Registration:
     features: Dict
     params: Dict
     version: int = 1
+    bucket: Optional[_TokenBucket] = None  # None: quotas disabled
+    breaker: _Breaker = dataclasses.field(default_factory=_Breaker)
+    tstats: _TenantStats = dataclasses.field(default_factory=_TenantStats)
 
 
 @dataclasses.dataclass
@@ -134,6 +302,7 @@ class _Pending:
     nodes: Optional[np.ndarray]  # canonical int32, validated at submit
     t_admit: float
     future: "Future[HGNNResponse]"
+    deadline: Optional[float] = None  # absolute perf_counter seconds
 
 
 def _deliver(fut: Future, *, result=None, exc: Optional[Exception] = None
@@ -166,15 +335,19 @@ class HGNNServeEngine:
 
     def __init__(self, session: Optional[Session] = None,
                  spec: Optional[ExecutorSpec] = None,
-                 policy: Optional[ServePolicy] = None):
+                 policy: Optional[ServePolicy] = None,
+                 faults: Optional[FaultInjector] = None):
         """Build an engine over an existing ``Session`` (to share its
         caches) or a fresh one from ``spec``; ``policy`` tunes admission
-        and batching (see ``repro.api.ServePolicy``)."""
+        and batching (see ``repro.api.ServePolicy``); ``faults`` threads
+        a ``FaultInjector`` through the serving path (chaos testing —
+        the default is a no-op)."""
         if session is not None and spec is not None:
             raise ValueError("pass a Session or a spec for a fresh one, "
                              "not both")
         self.session = session if session is not None else Session(spec)
         self.policy = policy if policy is not None else ServePolicy()
+        self.faults = faults
         self._registered: Dict[str, _Registration] = {}
         self._queue: List[_Pending] = []
         self._lock = threading.Lock()
@@ -190,6 +363,11 @@ class HGNNServeEngine:
         self._forwards_subset = 0
         self._forwards_dependency = 0
         self._rejected = 0
+        self._deadline_exceeded = 0
+        self._quota_rejected = 0
+        self._retries = 0
+        self._breaker_fastfails = 0
+        self._degraded_steps = 0
         # bounded: a long-lived engine must not grow a per-request list
         # forever; percentiles come from the most recent window
         self._latencies_us: "collections.deque[float]" = collections.deque(
@@ -219,8 +397,13 @@ class HGNNServeEngine:
         feats = features if features is not None else device_features(graph)
         if params is None:
             params = compiled.init(seed)
+        bucket = None
+        if self.policy.tenant_rate is not None:
+            bucket = _TokenBucket(self.policy.tenant_rate,
+                                  self.policy.effective_burst,
+                                  time.perf_counter())
         reg = _Registration(name, graph.fingerprint(), compiled, feats,
-                            params)
+                            params, bucket=bucket)
         if warm:
             compiled.forward(params, feats).block_until_ready()
         with self._lock:
@@ -243,6 +426,11 @@ class HGNNServeEngine:
         produced it, and versions observed in service order are
         monotonically non-decreasing.
 
+        Installing new parameters also resets the registration's
+        circuit breaker: if the old ones were the reason it opened, the
+        very next request probes the fresh set instead of waiting out
+        the cooldown.
+
         Example::
 
             out = compiled.fit(feats, labels, masks, epochs=50)
@@ -255,7 +443,14 @@ class HGNNServeEngine:
                                f"(have {sorted(self._registered)})")
             reg.params = params
             reg.version += 1
+            reg.breaker.record_success()  # new params: breaker resets
             return reg.version
+
+    def _fire(self, site: str) -> None:
+        """Fault-injection hook: delegate to the engine's injector, a
+        no-op when none is configured (the production default)."""
+        if self.faults is not None:
+            self.faults.fire(site)
 
     # --------------------------------------------------------- admission --
     def _canonical_nodes(self, reg: _Registration, rid: int,
@@ -281,6 +476,15 @@ class HGNNServeEngine:
         raise.  When the queue is at ``policy.max_queue``, ``"block"``
         backpressure waits for the serving loop to drain capacity;
         ``"reject"`` raises :class:`AdmissionError`.
+
+        With quotas enabled (``ServePolicy.tenant_rate``), each tenant's
+        token bucket is checked — atomically across the batch — *before*
+        the shared queue: an over-rate tenant raises
+        :class:`QuotaExceeded` without consuming queue capacity, so one
+        hot tenant cannot starve the others.  A request whose effective
+        deadline is already expired (``deadline_ms <= 0``) is admitted
+        but its future fails immediately with :class:`DeadlineExceeded`
+        — it never touches the queue.
 
         Example::
 
@@ -311,9 +515,33 @@ class HGNNServeEngine:
                         f"request {r.rid}: graph {r.graph!r} not registered "
                         f"(have {sorted(self._registered)})")
                 regs.append(reg)
+            # per-tenant token-bucket admission, atomic across the batch:
+            # refill every touched bucket, check them all, then consume —
+            # a quota raise admits nothing and charges nobody
+            if self.policy.tenant_rate is not None:
+                now = time.perf_counter()
+                share: Dict[str, int] = {}
+                by_name: Dict[str, _Registration] = {}
+                for r, reg in zip(reqs, regs):
+                    share[reg.name] = share.get(reg.name, 0) + 1
+                    by_name[reg.name] = reg
+                for name, n in share.items():
+                    bucket = by_name[name].bucket
+                    bucket.refill(now)
+                    if bucket.tokens < n:
+                        by_name[name].tstats.rejected_quota += n
+                        self._quota_rejected += n
+                        self._rejected += len(reqs)
+                        raise QuotaExceeded(
+                            f"tenant {name!r} over its admission rate "
+                            f"({bucket.tokens:.1f} tokens for {n} "
+                            f"requests; rate={self.policy.tenant_rate}/s "
+                            f"burst={self.policy.effective_burst})")
+                for name, n in share.items():
+                    by_name[name].bucket.take(n)
         # the O(n) id scans run outside the lock (registrations are never
         # removed): a large batch must not stall the serving loop
-        pendings = [(r, self._canonical_nodes(reg, r.rid, r.nodes))
+        pendings = [(r, reg, self._canonical_nodes(reg, r.rid, r.nodes))
                     for r, reg in zip(reqs, regs)]
         with self._lock:
             epoch = self._stop_epoch
@@ -326,7 +554,9 @@ class HGNNServeEngine:
                 if self._draining or self._stop_epoch != epoch:
                     raise AdmissionError(
                         "engine is stopping; admission closed")
-                self._queue_drained.wait(timeout=0.1)
+                # untimed: step()'s drain and stop() notify this
+                # condition on every state change, so no poll interval
+                self._queue_drained.wait()
             if self._draining or self._stop_epoch != epoch:
                 # a submitter that blocked across a stop() must not
                 # enqueue into an engine whose consumer is gone — however
@@ -334,22 +564,43 @@ class HGNNServeEngine:
                 raise AdmissionError("engine is stopping; admission closed")
             now = time.perf_counter()
             futures: List[Future] = []
-            for r, nodes in pendings:
+            enqueued = False
+            for r, reg, nodes in pendings:
                 fut: "Future[HGNNResponse]" = Future()
-                self._queue.append(_Pending(r, nodes, now, fut))
                 futures.append(fut)
-            self._work_ready.notify_all()
+                reg.tstats.submitted += 1
+                dl_ms = (r.deadline_ms if r.deadline_ms is not None
+                         else self.policy.deadline_ms)
+                if dl_ms is not None and dl_ms <= 0:
+                    # already expired at submit: fail fast, never enqueue
+                    reg.tstats.deadline_exceeded += 1
+                    self._deadline_exceeded += 1
+                    _deliver(fut, exc=DeadlineExceeded(
+                        f"request {r.rid}: deadline_ms={dl_ms} already "
+                        f"expired at submit"))
+                    continue
+                deadline = None if dl_ms is None else now + dl_ms / 1e3
+                self._queue.append(_Pending(r, nodes, now, fut, deadline))
+                enqueued = True
+            if enqueued:
+                self._work_ready.notify_all()
         return futures[0] if single else futures
 
     # ----------------------------------------------------------- serving --
     def _serve_group(self, reg: _Registration, group: List[_Pending],
-                     params: Dict, version: int) -> List[HGNNResponse]:
+                     params: Dict, version: int,
+                     subset_mode: Optional[str] = None
+                     ) -> List[HGNNResponse]:
         """One compiled forward for every pending request of one
         registration: a subset path (head-only or k-hop dependency, per
         ``ServePolicy.subset_mode``) when every request names ids whose
         union coverage is within policy, the full-graph forward
         otherwise.  Exactly one device->host transfer and one gather per
-        request either way."""
+        request either way.  ``subset_mode`` overrides the policy's for
+        this attempt — the degradation ladder passes ``"head"`` under
+        queue pressure.  Fault-injection sites (``_fire``): ``extract``
+        before the closure extraction, ``forward`` before the compiled
+        forward, ``host_transfer`` before the device->host copy."""
         t_start = time.perf_counter()
         nodes_list = [p.nodes for p in group]
         union = None
@@ -358,15 +609,19 @@ class HGNNServeEngine:
             coverage = union.size / max(1, reg.compiled.num_target)
             if coverage > self.policy.subset_threshold:
                 union = None
+        effective_mode = (subset_mode if subset_mode is not None
+                          else self.policy.subset_mode)
         mode = "full"
         if union is not None:
             # union ids were canonicalized at admission; skip re-scanning
             # them inside the timed serving window
-            if self.policy.subset_mode == "dependency":
+            if effective_mode == "dependency":
+                self._fire("extract")
                 sub = reg.compiled.dependency_subset(
                     union, bucket_min=self.policy.bucket_min,
                     validate=False)
                 if sub.coverage <= self.policy.dependency_threshold:
+                    self._fire("forward")
                     logits = reg.compiled.forward_subset(
                         params, reg.features, union,
                         bucket_min=self.policy.bucket_min, validate=False,
@@ -375,13 +630,16 @@ class HGNNServeEngine:
                 else:
                     union = None  # closure blew up: full forward wins
             else:
+                self._fire("forward")
                 logits = reg.compiled.forward_subset(
                     params, reg.features, union,
                     bucket_min=self.policy.bucket_min, validate=False)
                 mode = "subset"
         if union is None:
+            self._fire("forward")
             logits = reg.compiled.forward(params, reg.features)
         logits.block_until_ready()
+        self._fire("host_transfer")
         done = time.perf_counter()
         host_logits = np.asarray(logits)
         preds_all = None if union is not None else host_logits.argmax(-1)
@@ -423,20 +681,123 @@ class HGNNServeEngine:
                 self._queue_us.append(r.queue_us)
                 self._compute_us.append(r.compute_us)
             self._served += len(group)
+            reg.tstats.served += len(group)
         return responses
+
+    def _serve_with_recovery(self, name: str, group: List[_Pending],
+                             degraded: bool):
+        """Serve one registration's group through the recovery ladder;
+        returns ``(responses, error)`` where exactly one is ``None`` —
+        except the all-futures-expired case, which returns ``(None,
+        None)`` (deadline shedding is policy, not a serving failure).
+
+        The ladder, per attempt: (1) shed members whose deadline expired
+        while queued (or during a previous attempt's backoff) with
+        :class:`DeadlineExceeded`; (2) consult the registration's
+        circuit breaker — open fails the group fast with
+        :class:`CircuitOpen`, no forward attempted; (3) snapshot
+        ``(params, version)`` and serve.  A failure feeds the breaker
+        and is classified (``serve/faults.is_transient``): transient
+        retries with capped exponential backoff — re-snapshotting
+        params, so a ``swap_params`` mid-retry heals the group —
+        permanent fails the futures immediately.  ``degraded=True``
+        serves dependency-mode groups through the cheaper head-only
+        subset forward (the degradation rung)."""
+        attempt = 0
+        cooldown_s = self.policy.breaker_cooldown_ms / 1e3
+        subset_mode = "head" if degraded else None
+        while True:
+            now = time.perf_counter()
+            alive: List[_Pending] = []
+            expired: List[_Pending] = []
+            for p in group:
+                if p.deadline is not None and now >= p.deadline:
+                    expired.append(p)
+                else:
+                    alive.append(p)
+            if expired:
+                with self._lock:
+                    reg = self._registered[name]
+                    reg.tstats.deadline_exceeded += len(expired)
+                    self._deadline_exceeded += len(expired)
+                for p in expired:
+                    _deliver(p.future, exc=DeadlineExceeded(
+                        f"request {p.req.rid}: deadline expired while "
+                        f"queued ({(now - p.t_admit) * 1e3:.1f} ms since "
+                        f"admission)"))
+            group = alive
+            if not group:
+                return None, None
+            with self._lock:
+                # snapshot (params, version) as one atomic pair: a racing
+                # swap_params either fully serves this group or the next
+                reg = self._registered[name]
+                params, version = reg.params, reg.version
+                allowed = reg.breaker.allow(now, cooldown_s)
+                if not allowed:
+                    reg.tstats.breaker_fastfails += len(group)
+                    self._breaker_fastfails += len(group)
+                    err: Exception = CircuitOpen(
+                        f"registration {name!r}: breaker open after "
+                        f"{reg.breaker.consecutive} consecutive failures "
+                        f"(last: {reg.breaker.last_error!r})")
+            if not allowed:
+                for p in group:
+                    _deliver(p.future, exc=err)
+                return None, err
+            try:
+                responses = self._serve_group(reg, group, params, version,
+                                              subset_mode=subset_mode)
+            except Exception as e:
+                with self._lock:
+                    reg.breaker.record_failure(
+                        e, self.policy.breaker_threshold,
+                        time.perf_counter())
+                    reg.tstats.failures += 1
+                    retry = (is_transient(e)
+                             and attempt < self.policy.max_retries)
+                    if retry:
+                        self._retries += 1
+                        reg.tstats.retries += 1
+                if retry:
+                    attempt += 1
+                    backoff_ms = min(self.policy.retry_backoff_cap_ms,
+                                     self.policy.retry_backoff_ms
+                                     * 2 ** (attempt - 1))
+                    if backoff_ms > 0:
+                        time.sleep(backoff_ms / 1e3)
+                    continue
+                # permanent (or out of retries): fail THIS group's
+                # futures — an admitted request is never silently dropped
+                for p in group:
+                    _deliver(p.future, exc=e)
+                return None, e
+            with self._lock:
+                reg.breaker.record_success()
+            for p, resp in zip(group, responses):
+                _deliver(p.future, result=resp)
+            return responses, None
 
     def step(self) -> List[HGNNResponse]:
         """Drain the queue: one compiled forward per registration serves
         all its queued requests; registrations sharing a topology
         fingerprint run adjacently (their frontend products are the same
         cached objects).  Responses come back in service order, and every
-        pending future resolves (to its response, or to the serving
-        exception if one escapes).
+        pending future resolves (to its response, a
+        ``DeadlineExceeded``, or the classified serving exception).
 
+        Each group is served through the recovery ladder
+        (``_serve_with_recovery``): expired members are shed, the
+        breaker is consulted, transient failures retry with backoff.
         One group's serving failure (e.g. hot-swapped parameters with a
         mismatched pytree) is isolated: its futures carry the exception,
         every *other* drained group is still served, and the first error
-        re-raises after the drain so synchronous callers see it.
+        re-raises after the drain so synchronous callers see it
+        (deadline sheds do not re-raise — shedding is policy working as
+        designed).  When the drained queue's fill fraction reaches
+        ``ServePolicy.degrade_pressure`` and the policy's subset mode is
+        ``"dependency"``, this step serves eligible groups through the
+        cheaper head-only subset forward instead — degrade before shed.
 
         Example::
 
@@ -445,8 +806,13 @@ class HGNNServeEngine:
         with self._lock:
             if not self._queue:
                 return []
+            pressure = len(self._queue) / self.policy.max_queue
             queue, self._queue = self._queue, []
             self._queue_drained.notify_all()
+            degraded = (self.policy.subset_mode == "dependency"
+                        and pressure >= self.policy.degrade_pressure)
+            if degraded:
+                self._degraded_steps += 1
         # fingerprint-major grouping; stable, so per-tenant FIFO holds
         order = sorted(
             range(len(queue)),
@@ -461,25 +827,12 @@ class HGNNServeEngine:
             while i < len(order) and queue[order[i]].req.graph == name:
                 group.append(queue[order[i]])
                 i += 1
-            with self._lock:
-                # snapshot (params, version) as one atomic pair: a racing
-                # swap_params either fully serves this group or the next
-                reg = self._registered[name]
-                params, version = reg.params, reg.version
-            try:
-                group_responses = self._serve_group(reg, group, params,
-                                                    version)
-            except Exception as e:
-                # fail THIS group's futures, keep serving the others —
-                # an admitted request must never be silently dropped
-                for p in group:
-                    _deliver(p.future, exc=e)
-                if first_error is None:
-                    first_error = e
-                continue
-            for p, resp in zip(group, group_responses):
-                _deliver(p.future, result=resp)
-            responses.extend(group_responses)
+            group_responses, err = self._serve_with_recovery(
+                name, group, degraded)
+            if err is not None and first_error is None:
+                first_error = err
+            if group_responses:
+                responses.extend(group_responses)
         if first_error is not None:
             raise first_error
         return responses
@@ -501,17 +854,21 @@ class HGNNServeEngine:
             if self._running:
                 raise RuntimeError("admission loop already running")
             self._running = True
-        self._thread = threading.Thread(target=self._loop,
-                                        name="hgnn-serve-loop", daemon=True)
-        self._thread.start()
+            self._thread = threading.Thread(target=self._loop,
+                                            name="hgnn-serve-loop",
+                                            daemon=True)
+            thread = self._thread
+        thread.start()
 
     def _loop(self) -> None:
         """Background serving loop: wait for work, drain it, repeat;
-        drains whatever is still queued when ``stop()`` flips the flag."""
+        drains whatever is still queued when ``stop()`` flips the flag.
+        The wait is untimed — ``submit`` and ``stop`` notify
+        ``_work_ready`` on every state change, so the loop never polls."""
         while True:
             with self._lock:
                 while self._running and not self._queue:
-                    self._work_ready.wait(timeout=0.05)
+                    self._work_ready.wait()
                 if not self._running and not self._queue:
                     return
             try:
@@ -534,9 +891,12 @@ class HGNNServeEngine:
             self._stop_epoch += 1
             self._work_ready.notify_all()
             self._queue_drained.notify_all()
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+            thread = self._thread
+        if thread is not None:
+            # join outside the lock: the loop's final step() needs it
+            thread.join()
+            with self._lock:
+                self._thread = None
         try:
             # anything that slipped in before admission closed gets
             # served; a failed group's futures carry its error
@@ -553,19 +913,24 @@ class HGNNServeEngine:
     @property
     def running(self) -> bool:
         """Whether the background admission loop is live."""
-        return self._thread is not None and self._thread.is_alive()
+        with self._lock:
+            thread = self._thread
+        return thread is not None and thread.is_alive()
 
     # ------------------------------------------------------------- stats --
     def stats(self) -> Dict:
         """One serving snapshot: request/forward counts split by mode,
         batching factor, latency percentiles with the queueing-vs-compute
-        split, and the shared session's cache stats.
+        split, fault-tolerance counters (deadline/quota sheds, retries,
+        breaker fast-fails, degraded steps), a per-tenant breakdown
+        (``"tenants"``: submitted/served/rejected splits plus the
+        breaker state), and the shared session's cache stats.
 
         Example::
 
             s = engine.stats()
-            print(s["batching_factor"], s["queue_us_p50"],
-                  s["compute_us_p50"])
+            print(s["batching_factor"], s["retries"],
+                  s["tenants"]["acm"]["breaker"])
         """
         def _pct(deque_, q):
             return (float(np.percentile(np.asarray(deque_), q))
@@ -578,6 +943,11 @@ class HGNNServeEngine:
                 "graphs_registered": len(self._registered),
                 "requests_served": self._served,
                 "requests_rejected": self._rejected,
+                "requests_deadline_exceeded": self._deadline_exceeded,
+                "requests_quota_rejected": self._quota_rejected,
+                "retries": self._retries,
+                "breaker_fastfails": self._breaker_fastfails,
+                "degraded_steps": self._degraded_steps,
                 "queued": len(self._queue),
                 "running": self._running,
                 "forwards": forwards,
@@ -589,5 +959,18 @@ class HGNNServeEngine:
                 "latency_us_p95": _pct(self._latencies_us, 95),
                 "queue_us_p50": _pct(self._queue_us, 50),
                 "compute_us_p50": _pct(self._compute_us, 50),
+                "tenants": {
+                    name: {
+                        "submitted": reg.tstats.submitted,
+                        "served": reg.tstats.served,
+                        "rejected_quota": reg.tstats.rejected_quota,
+                        "deadline_exceeded": reg.tstats.deadline_exceeded,
+                        "failures": reg.tstats.failures,
+                        "retries": reg.tstats.retries,
+                        "breaker_fastfails": reg.tstats.breaker_fastfails,
+                        "breaker": reg.breaker.state,
+                    }
+                    for name, reg in self._registered.items()
+                },
                 "session": self.session.stats(),
             }

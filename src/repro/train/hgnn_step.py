@@ -240,6 +240,8 @@ def fit(
     kernel_backend: str = "interpret",
     executor: Optional[Any] = None,
     epoch_callback: Optional[Callable[[int, float], None]] = None,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 1,
 ) -> Dict[str, Any]:
     """Full-graph training loop; returns final state + metric history.
 
@@ -249,9 +251,32 @@ def fit(
     uses it for the latency trajectory).  Prefer reaching this through
     ``repro.api.CompiledHGNN.fit``, which binds ``executor`` to the
     session's spec.
+
+    ``ckpt_dir`` enables fault-tolerant training through
+    ``repro.train.checkpoint.CheckpointManager``: train state (params +
+    optimizer) is saved atomically every ``ckpt_every`` epochs, and a
+    ``fit`` pointed at a directory with checkpoints resumes from the
+    latest *complete* one (a crash mid-save leaves only a ``.tmp-`` dir,
+    which restore skips and the next save garbage-collects).  The loss
+    history is carried in the checkpoint, so the returned ``losses``
+    covers every epoch regardless of how many times the loop restarted.
     """
     na_backend, kernel_backend = _resolve_executor(executor, na_backend, kernel_backend)
     state = init_train_state(model, jax.random.key(seed))
+    ckpt = None
+    start_epoch = 0
+    losses: List[float] = []
+    if ckpt_dir is not None:
+        if ckpt_every < 1:
+            raise ValueError(f"ckpt_every must be >= 1, got {ckpt_every}")
+        from repro.train.checkpoint import CheckpointManager
+
+        ckpt = CheckpointManager(ckpt_dir)
+        restored = ckpt.restore_latest(state)
+        if restored is not None:
+            _, state, extra = restored
+            start_epoch = int(extra["epoch"])
+            losses = [float(x) for x in extra.get("losses", [])]
     step = make_train_step(
         model,
         graphs,
@@ -268,12 +293,14 @@ def fit(
         na_backend=na_backend,
         kernel_backend=kernel_backend,
     )
-    losses: List[float] = []
-    for epoch in range(epochs):
+    for epoch in range(start_epoch, epochs):
         state, loss = step(state, features, labels, masks["train"])
         losses.append(float(loss))
         if epoch_callback is not None:
             epoch_callback(epoch, losses[-1])
+        if ckpt is not None and (epoch + 1) % ckpt_every == 0:
+            # extra carries resume state: completed-epoch count + losses
+            ckpt.save(epoch + 1, state, extra={"epoch": epoch + 1, "losses": losses})
     return {
         "state": state,
         "losses": losses,

@@ -16,6 +16,21 @@ import pytest
 from repro.hetero import make_dataset
 
 
+def pytest_addoption(parser):
+    # pyproject sets `timeout`/`timeout_method` for pytest-timeout (a
+    # [test] extra).  In a minimal environment without the plugin those
+    # ini keys would be unknown and warn on every run; register them as
+    # inert options so the suite stays warning-clean either way — with
+    # the plugin installed it registers them first and enforces them.
+    try:
+        import pytest_timeout  # noqa: F401
+    except ModuleNotFoundError:
+        parser.addini("timeout", "per-test ceiling (pytest-timeout)",
+                      default=None)
+        parser.addini("timeout_method", "pytest-timeout method",
+                      default=None)
+
+
 def pytest_configure(config):
     # Registered in pyproject.toml too; kept here so a bare `pytest tests`
     # invocation from another rootdir still knows the markers.

@@ -38,7 +38,8 @@ TRAIN_POINT = {
 PIPELINE_POINT = {
     "schema": "pipeline_bench/v1",
     "scale": 0.15,
-    "serve": {"subset_vs_full": 0.9, "dependency_vs_full": 1.2},
+    "serve": {"subset_vs_full": 0.9, "dependency_vs_full": 1.2,
+              "chaos_unrecovered": 0.0},
 }
 
 
@@ -50,7 +51,8 @@ def test_extract_metrics_gfp():
         "train/ACM/latency_ratio": pytest.approx(3.0)}
     assert extract_metrics(PIPELINE_POINT) == {
         "serve/subset_vs_full": pytest.approx(0.9),
-        "serve/dependency_vs_full": pytest.approx(1.2)}
+        "serve/dependency_vs_full": pytest.approx(1.2),
+        "serve/chaos_unrecovered": 0.0}
     with pytest.raises(ValueError):
         extract_metrics({"schema": "mystery/v9"})
 
@@ -60,6 +62,25 @@ def test_gate_fires_on_serve_ratio_regression():
     worse["serve"]["subset_vs_full"] = 1.8
     failures = compare(PIPELINE_POINT, worse, tolerance=0.5)
     assert len(failures) == 1 and "serve/subset_vs_full" in failures[0]
+
+
+def test_zero_baseline_metric_is_tracked_and_gates():
+    """chaos_unrecovered's baseline is a legitimate 0.0: it must not be
+    truthiness-dropped from the tracked set, and any candidate above it
+    fails regardless of tolerance (0 * (1 + tol) is still 0)."""
+    assert "serve/chaos_unrecovered" in extract_metrics(PIPELINE_POINT)
+    worse = copy.deepcopy(PIPELINE_POINT)
+    worse["serve"]["chaos_unrecovered"] = 1 / 24
+    failures = compare(PIPELINE_POINT, worse, tolerance=10.0)
+    assert len(failures) == 1 and "chaos_unrecovered" in failures[0]
+    assert "admits no regression" in failures[0]
+    # and a clean chaos round still passes
+    assert compare(PIPELINE_POINT, PIPELINE_POINT, tolerance=0.2) == []
+    # dropping the metric from the candidate is also a failure
+    dropped = copy.deepcopy(PIPELINE_POINT)
+    del dropped["serve"]["chaos_unrecovered"]
+    failures = compare(PIPELINE_POINT, dropped, tolerance=0.2)
+    assert len(failures) == 1 and "missing from candidate" in failures[0]
 
 
 def test_gate_fires_on_2x_slower_point():
