@@ -13,9 +13,15 @@ the CI runner:
   train_bench/v1  banded-vs-jnp per-epoch latency ratio per dataset;
   pipeline_bench/v1  serving subset-vs-full latency ratios (head-only
                   and k-hop dependency mode) for the same request queue,
-                  plus the chaos round's unrecovered-request fraction
+                  the chaos round's unrecovered-request fraction
                   (``serve/chaos_unrecovered``, baseline 0.0 — a zero
-                  baseline means *any* unrecovered request regresses).
+                  baseline means *any* unrecovered request regresses),
+                  and the incremental-frontend ratios
+                  (``frontend/incremental_vs_rebuild`` for the
+                  off-metapath cache-migration fast path,
+                  ``frontend/incremental_touched_vs_rebuild`` for
+                  on-metapath incremental recompose) — delta-path
+                  latency vs a cold rebuild of the same end graph.
 
 Scale adjustment: ratio metrics are only meaningful between points of
 the same ``scale`` (tiny graphs fit one source band, so e.g. the tile
@@ -70,6 +76,12 @@ def extract_metrics(point: Dict) -> Dict[str, float]:
         for k, r in point.get("serve", {}).items():
             if r is not None:
                 metrics[f"serve/{k}"] = r
+        # incremental-frontend ratios: delta-path latency vs a cold
+        # rebuild of the same end graph (lower is better; < 1.0 is
+        # structural — the delta path does strictly less work)
+        for k, r in point.get("frontend", {}).items():
+            if r is not None:
+                metrics[f"frontend/{k}"] = r
     else:
         raise ValueError(f"unknown bench schema {schema!r}")
     return metrics

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.api import ExecutorSpec, ServePolicy, Session, device_features
 from repro.core.hgnn import HGNNConfig
-from repro.hetero import make_dataset
+from repro.hetero import GraphDelta, make_dataset
 from repro.serve import HGNNRequest, HGNNServeEngine
 
 scale = float(sys.argv[1]) if len(sys.argv) > 1 else 0.5
@@ -51,24 +51,25 @@ print(f"warm compile: frontend ran {st.frontend_runs}x, "
       f"served {st.frontend_served}x from the session "
       f"(one PackedEdges/batch set shared by both models)")
 
-# 5) async multi-tenant serving: register >1 graph on one engine, start
-# the background admission loop, and submit — futures resolve as the loop
-# batches each graph's queued requests through one compiled forward
-# (node-subset micro-batch when coverage is small, full-graph otherwise)
+# 5) async multi-tenant serving: register >1 graph on one engine — each
+# registration hands back a TenantHandle — start the background admission
+# loop, and submit — futures resolve as the loop batches each graph's
+# queued requests through one compiled forward (node-subset micro-batch
+# when coverage is small, full-graph otherwise)
 imdb = make_dataset("IMDB", scale=scale)
 engine = HGNNServeEngine(session=sess, policy=ServePolicy(
     subset_threshold=0.5, max_queue=256))
-engine.register("acm", g, targets, shgn.cfg)
-engine.register("imdb", imdb, ["AMA", "MAM", "MKM"], HGNNConfig(
+acm = engine.register("acm", g, targets, shgn.cfg)
+imdb_t = engine.register("imdb", imdb, ["AMA", "MAM", "MKM"], HGNNConfig(
     model="rgat", hidden=64, num_layers=2, num_classes=3, target_type="M"))
 engine.run()  # submit() now returns immediately; a daemon thread serves
-responses = [f.result(timeout=120) for f in engine.submit([
-    HGNNRequest(0, "acm", nodes=np.arange(8)),   # subset micro-batch
-    HGNNRequest(1, "imdb", nodes=np.arange(4)),  # subset micro-batch
-])]
+responses = [
+    acm.submit(HGNNRequest(0, nodes=np.arange(8))).result(timeout=120),
+    imdb_t.submit(HGNNRequest(1, nodes=np.arange(4))).result(timeout=120),
+]
 # a nodes=None request asks for every target vertex, so its group takes
 # the full-graph forward instead of the subset path
-responses.append(engine.submit(HGNNRequest(2, "acm")).result(timeout=120))
+responses.append(acm.submit(HGNNRequest(2)).result(timeout=120))
 for r in responses:
     print(f"served rid={r.rid} graph={r.graph} mode={r.mode} "
           f"logits={r.logits.shape} v{r.params_version} "
@@ -77,11 +78,26 @@ for r in responses:
           f"{r.compute_us / 1e3:.1f}; batched with {r.batched_with})")
 
 # 6) parameter hot-swap: install freshly trained params into the live
-# registration; the version stamps every later response
-v = engine.swap_params("acm", shgn.init(1))
-r = engine.submit(HGNNRequest(3, "acm", nodes=np.arange(8))).result(
-    timeout=120)
+# registration through its handle; the version stamps every later
+# response
+v = acm.swap_params(shgn.init(1))
+r = acm.submit(HGNNRequest(3, nodes=np.arange(8))).result(timeout=120)
 print(f"hot-swap: registration now v{v}, response served by "
+      f"v{r.params_version}")
+
+# 7) topology hot-swap: a GraphDelta (here: fresh paper-subject edges)
+# flows through the incremental frontend — warm cache entries for
+# untouched metapaths migrate in place, touched products recompose
+# incrementally — and the successor model installs atomically under the
+# same version stamp
+ps = g.relations["PS"]
+rng = np.random.default_rng(7)
+delta = GraphDelta.insert("PS", rng.integers(0, ps.num_src, 4),
+                          rng.integers(0, ps.num_dst, 4))
+v = acm.swap_graph(delta)
+r = acm.submit(HGNNRequest(4, nodes=np.arange(8))).result(timeout=120)
+print(f"graph-swap: registration now v{v} "
+      f"(fingerprint {acm.fingerprint[:8]}...), response served by "
       f"v{r.params_version}")
 engine.stop()
 

@@ -32,9 +32,11 @@ import numpy as np
 from repro.api.spec import ExecutorSpec
 from repro.core.hgnn.models import HGNN, HGNNConfig
 from repro.core.subgraph import DependencyExtractor, DependencySubset
+from repro.hetero.delta import GraphDelta
 from repro.hetero.graph import HetGraph
 from repro.pipeline.cache import SemanticGraphCache
-from repro.pipeline.frontend import FrontendPipeline, FrontendResult
+from repro.pipeline.frontend import (DeltaResult, FrontendPipeline,
+                                     FrontendResult)
 
 
 def canonical_node_ids(node_ids, num_target: int, *,
@@ -76,6 +78,22 @@ def device_features(graph: HetGraph) -> Dict[str, jax.Array]:
         logits = compiled.forward(params, feats)
     """
     return {t: jnp.asarray(x) for t, x in graph.features.items()}
+
+
+def _changed_product_dsts(old_sem: Dict, new_sem: Dict,
+                          touched: Sequence[str]) -> Dict[str, np.ndarray]:
+    """Destination ids of added/removed product edges per touched metapath
+    (the extractor-memo invalidation key: frontier expansion only indexes
+    in-neighborhoods by destination, so the source side never matters)."""
+    changed: Dict[str, np.ndarray] = {}
+    for mp in touched:
+        a, b = old_sem[mp], new_sem[mp]
+        m = max(a.num_dst, b.num_dst)
+        ka = a.src.astype(np.int64) * m + a.dst.astype(np.int64)
+        kb = b.src.astype(np.int64) * m + b.dst.astype(np.int64)
+        diff = np.setxor1d(ka, kb, assume_unique=True)
+        changed[mp] = np.unique(diff % m)
+    return changed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +147,10 @@ class CompiledHGNN:
         self._subset_traces = 0
         self._forward_dep = None
         self._dependency_traces = 0
+        # the CompiledHGNN whose jitted dependency executor (and trace
+        # counter) this one uses; compile_delta transplants the executor
+        # across graph deltas, so chained swaps all point at the original
+        self._dep_origin: "CompiledHGNN" = self
         self._extractor: Optional[DependencyExtractor] = None
         # frozen SF betas per (params, features) object pair — the
         # dependency path's calibration artifacts (strong refs keep the
@@ -206,8 +228,13 @@ class CompiledHGNN:
         """How many times the dependency-subset forward has (re)traced —
         stable across requests whose closures share a bucket signature
         (see ``DependencySubset.signature``), the dependency-mode sibling
-        of :attr:`subset_traces`."""
-        return self._dependency_traces
+        of :attr:`subset_traces`.  After a graph delta
+        (``Session.compile_delta``) the counter is shared with the
+        pre-delta compiled object: the dependency executor reads topology
+        only through its traced ``DependencySubset`` pytree, so the swap
+        transplants the jitted function — and an unchanged bucket
+        signature provably costs zero new traces."""
+        return self._dep_origin._dependency_traces
 
     def dependency_subset(self, node_ids, *, bucket_min: int = 8,
                           validate: bool = True) -> DependencySubset:
@@ -517,6 +544,71 @@ class Session:
         compiled = CompiledHGNN(self, self.spec, model, res, graphs, fp)
         self._memo_put(self._compiled, ckey, compiled)
         return compiled
+
+    # --------------------------------------------------------------- delta --
+    def compile_delta(self, compiled: CompiledHGNN, graph: HetGraph,
+                      delta: GraphDelta
+                      ) -> Tuple[CompiledHGNN, HetGraph, DeltaResult]:
+        """Re-bind a compiled model to a delta-mutated graph incrementally.
+
+        Runs the frontend's delta path (``FrontendPipeline.apply_delta``:
+        cache migration, incremental SGB, block-splice repack) instead of
+        a cold rebuild, then builds the successor ``CompiledHGNN`` — equal
+        in every product to ``compile(graph.apply_delta(delta), ...)`` on
+        a cold cache, but carrying forward what a delta cannot invalidate:
+
+          * the jitted dependency-subset executor (it reads topology only
+            through the traced ``DependencySubset`` pytree, so requests
+            whose closures keep their bucket signature cost zero new
+            traces — the shared :attr:`CompiledHGNN.dependency_traces`
+            counter proves it);
+          * extractor memo entries whose closures no changed product edge
+            lands on (``DependencyExtractor.migrate_from``).
+
+        The full-graph forwards and fusion betas are *not* carried — they
+        close over the topology, so the successor re-traces/recalibrates
+        them on first use.  Returns
+        ``(new_compiled, new_graph, delta_result)``.
+
+        Example::
+
+            c2, g2, dres = sess.compile_delta(c1, g1, delta)
+            assert c2.dependency_traces == c1.dependency_traces
+        """
+        if graph.fingerprint() != compiled.fingerprint:
+            raise ValueError(
+                "graph does not match the compiled model's fingerprint "
+                "(pass the graph the model was compiled for)")
+        targets = [g.metapath for g in compiled.graphs]
+        dres = self.pipeline.apply_delta(graph, delta, targets)
+        new_graph, res = dres.graph, dres.result
+        fp_new = new_graph.fingerprint()
+        tkey = tuple(sorted(targets))
+        self._memo_put(self._frontends, (fp_new, tkey), res)
+        self._frontend_runs += 1
+        if self.spec.na_executor == "banded":
+            graphs = res.banded_batches()
+        else:
+            graphs = res.batches()
+        cfg = compiled.cfg
+        model = HGNN(cfg, new_graph.feature_dims, new_graph.num_vertices,
+                     sorted(targets))
+        successor = CompiledHGNN(self, self.spec, model, res, graphs,
+                                 fp_new)
+        if compiled._forward_dep is not None:
+            successor._forward_dep = compiled._forward_dep
+            successor._dep_origin = compiled._dep_origin
+        if compiled._extractor is not None:
+            ext = DependencyExtractor(model, graphs, res.semantic,
+                                      flavor=self.spec.na_executor)
+            changed = _changed_product_dsts(
+                compiled.frontend.semantic, res.semantic, dres.touched)
+            ext.migrate_from(compiled._extractor, changed,
+                             frozenset(dres.touched))
+            successor._extractor = ext
+        self._compiles += 1
+        self._memo_put(self._compiled, (fp_new, tkey, cfg), successor)
+        return successor, new_graph, dres
 
     # --------------------------------------------------------------- stats --
     def stats(self) -> SessionStats:

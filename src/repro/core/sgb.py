@@ -332,6 +332,126 @@ def execute_plan(
     )
 
 
+def _with_shape(rel: Relation, num_src: int, num_dst: int) -> Relation:
+    """Same edge set under (possibly grown) vertex counts.
+
+    The canonical (src, dst) sort order is shape-independent, so the
+    arrays carry over verbatim — no re-sort, no copy.
+    """
+    if (rel.num_src, rel.num_dst) == (num_src, num_dst):
+        return rel
+    return Relation(rel.src_type, rel.dst_type, num_src, num_dst,
+                    rel.src, rel.dst)
+
+
+def _rel_diff(new: Relation, old: Relation) -> Relation:
+    """Edges of ``new`` absent from ``old`` (both canonical) — the Δ
+    operand of the incremental composition identity."""
+    old = _with_shape(old, new.num_src, new.num_dst)
+    nk = new.src.astype(np.int64) * new.num_dst + new.dst.astype(np.int64)
+    ok = old.src.astype(np.int64) * old.num_dst + old.dst.astype(np.int64)
+    keep = ~np.isin(nk, ok, assume_unique=True)
+    return Relation(new.src_type, new.dst_type, new.num_src, new.num_dst,
+                    new.src[keep], new.dst[keep])
+
+
+def _hops(metapath: str) -> set:
+    return {metapath[i:i + 2] for i in range(len(metapath) - 1)}
+
+
+def execute_plan_delta(
+    graph: HetGraph,
+    plan: Plan,
+    old_products: Dict[str, Relation],
+    removed_relations: frozenset,
+    preloaded: Optional[Dict[str, Relation]] = None,
+) -> SGBResult:
+    """Run a plan over a delta-mutated graph, reusing prior products.
+
+    For each step ``out = left ∘ right`` where the pre-delta product of
+    ``out`` (and of both operands) is known, the boolean semiring's
+    monotonicity gives the exact incremental identity
+
+        out_new = out_old ∪ (Δleft ∘ right_new) ∪ (left_old ∘ Δright)
+
+    with ``Δx = x_new \\ x_old`` — O(Δ·deg) join work instead of a full
+    recompose.  The identity only holds insert-side: any step whose
+    metapath crosses a relation with *removed* edges (``out_old`` may
+    hold edges that no longer exist) falls back to a full composition, as
+    does any step whose prior product was evicted.  Either way every
+    output is built through ``Relation.from_edges``' canonical
+    sort-and-dedup, so results are bitwise-equal to a from-scratch
+    rebuild of the mutated graph.
+
+    ``old_products`` maps names to their pre-delta relations (one-hop
+    relations of the old graph plus cached semantic graphs under the old
+    fingerprint); ``removed_relations`` names one-hop relations with edge
+    removals.  Host backend only — the delta path is a cache-update
+    optimization, and the cache is host-side.
+
+    The returned ``SGBResult.device_stats`` reports
+    ``incremental_steps`` / ``full_steps``.
+    """
+    t0 = time.perf_counter()
+    total = CompositionCost.zero()
+    per_step: List[Tuple[PlanStep, CompositionCost]] = []
+    mats: Dict[str, Relation] = dict(graph.relations)
+    if preloaded:
+        mats.update(preloaded)
+    deltas: Dict[str, Optional[Relation]] = {}
+
+    def delta_of(name: str) -> Optional[Relation]:
+        if name not in deltas:
+            old = old_products.get(name)
+            new = mats.get(name)
+            deltas[name] = None if old is None or new is None else _rel_diff(
+                new, old)
+        return deltas[name]
+
+    stats = {"incremental_steps": 0, "full_steps": 0}
+    for st in plan.steps:
+        left_new, right_new = mats[st.left], mats[st.right]
+        old_out = old_products.get(st.out)
+        incremental = (
+            old_out is not None
+            and not (_hops(st.out) & removed_relations)
+            and delta_of(st.left) is not None
+            and delta_of(st.right) is not None
+        )
+        if incremental:
+            dl, dr = delta_of(st.left), delta_of(st.right)
+            old_l = _with_shape(
+                old_products[st.left], left_new.num_src, left_new.num_dst)
+            p1, c1 = compose_relations(dl, right_new)
+            p2, c2 = compose_relations(old_l, dr)
+            old_out = _with_shape(
+                old_out, left_new.num_src, right_new.num_dst)
+            out = Relation.from_edges(
+                old_out.src_type, old_out.dst_type,
+                old_out.num_src, old_out.num_dst,
+                np.concatenate([old_out.src, p1.src, p2.src]),
+                np.concatenate([old_out.dst, p1.dst, p2.dst]))
+            cost = CompositionCost(
+                macs=c1.macs + c2.macs,
+                bytes_read=c1.bytes_read + c2.bytes_read + old_out.nbytes,
+                bytes_written=out.nbytes)
+            stats["incremental_steps"] += 1
+        else:
+            out, cost = compose_relations(left_new, right_new)
+            stats["full_steps"] += 1
+        mats[st.out] = out
+        total = total + cost
+        per_step.append((st, cost))
+    return SGBResult(
+        graphs=mats,
+        cost=total,
+        per_step=per_step,
+        wall_seconds=time.perf_counter() - t0,
+        backend="host+delta",
+        device_stats=stats,
+    )
+
+
 def make_plan(
     graph: HetGraph,
     targets: Sequence[str],

@@ -5,6 +5,7 @@ matching, reordering — is the paper's *frontend* work and runs on the host,
 pipelined with the TPU backend (see DESIGN.md §2).
 """
 from repro.hetero.graph import HetGraph, Relation, compose_relations, CompositionCost
+from repro.hetero.delta import GraphDelta, apply_delta, union_relations
 from repro.hetero.datasets import make_dataset, DATASETS
 
 __all__ = [
@@ -12,6 +13,9 @@ __all__ = [
     "Relation",
     "compose_relations",
     "CompositionCost",
+    "GraphDelta",
+    "apply_delta",
+    "union_relations",
     "make_dataset",
     "DATASETS",
 ]

@@ -206,11 +206,14 @@ class HetGraph:
     def fingerprint(self) -> str:
         """Stable content hash of the topology (cache key for pipeline/).
 
-        Covers vertex counts and every relation's edge list — two graphs
+        Covers vertex counts and every relation's edge *set* — two graphs
         with the same fingerprint have identical frontend products
         (semantic graphs, restructure permutations), regardless of how
-        they were constructed.  Features are deliberately excluded: the
-        frontend operates on topology only.
+        they were constructed.  Edge lists are hashed through their
+        canonical sorted-unique key form, so a delta-applied graph and an
+        identically-rebuilt one hash equal even when a relation was
+        constructed with a different stored edge order.  Features are
+        deliberately excluded: the frontend operates on topology only.
         """
         if self._fingerprint is None:
             import hashlib
@@ -220,11 +223,13 @@ class HetGraph:
                 h.update(f"{t}:{self.num_vertices[t]};".encode())
             for rname in self.relation_names:
                 r = self.relations[rname]
-                # length-delimited records: name/edge-count prefix keeps
-                # distinct (name, edges) sequences from colliding byte-wise
-                h.update(f"{rname}:{r.num_edges};".encode())
-                h.update(np.ascontiguousarray(r.src).tobytes())
-                h.update(np.ascontiguousarray(r.dst).tobytes())
+                key = r.src.astype(np.int64) * r.num_dst + r.dst.astype(np.int64)
+                key = np.unique(key)
+                # length-delimited records: name/shape/edge-count prefix
+                # keeps distinct (name, edges) sequences from colliding
+                h.update(
+                    f"{rname}:{r.num_src}x{r.num_dst}:{key.size};".encode())
+                h.update(np.ascontiguousarray(key).tobytes())
             object.__setattr__(
                 self, "_fingerprint", f"{self.name}-{h.hexdigest()}")
         return self._fingerprint
@@ -245,6 +250,17 @@ class HetGraph:
 
     def total_edges(self) -> int:
         return sum(r.num_edges for r in self.relations.values())
+
+    def apply_delta(self, delta) -> "HetGraph":
+        """Return a new canonical graph with a :class:`GraphDelta` applied.
+
+        Thin forwarder to :func:`repro.hetero.delta.apply_delta` (kept
+        there to avoid a circular import); the result shares no mutable
+        state with ``self`` and its fingerprint memo starts cold.
+        """
+        from repro.hetero.delta import apply_delta as _apply
+
+        return _apply(self, delta)
 
     def metapath_is_valid(self, metapath: str) -> bool:
         """A metapath 'APSPA' is valid iff every adjacent pair is a relation."""

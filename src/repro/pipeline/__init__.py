@@ -4,13 +4,14 @@ software system; see frontend.py for the stage map).
 """
 from repro.pipeline.cache import (CacheStats, SemanticGraphCache,
                                   default_cache)
-from repro.pipeline.frontend import (FrontendPipeline, FrontendResult,
-                                     PipelineConfig)
+from repro.pipeline.frontend import (DeltaResult, FrontendPipeline,
+                                     FrontendResult, PipelineConfig)
 
 __all__ = [
     "CacheStats",
     "SemanticGraphCache",
     "default_cache",
+    "DeltaResult",
     "FrontendPipeline",
     "FrontendResult",
     "PipelineConfig",

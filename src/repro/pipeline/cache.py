@@ -36,19 +36,21 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    migrations: int = 0  # entries re-keyed in place by a graph delta
 
     @property
     def hit_rate(self) -> float:
         return self.hits / max(1, self.hits + self.misses)
 
     def snapshot(self) -> "CacheStats":
-        return CacheStats(self.hits, self.misses, self.evictions)
+        return CacheStats(self.hits, self.misses, self.evictions, self.migrations)
 
     def delta(self, before: "CacheStats") -> "CacheStats":
         return CacheStats(
             self.hits - before.hits,
             self.misses - before.misses,
             self.evictions - before.evictions,
+            self.migrations - before.migrations,
         )
 
 
@@ -59,6 +61,9 @@ class SemanticGraphCache:
         self.max_entries = max_entries
         self._store: "OrderedDict[Tuple, object]" = OrderedDict()
         self.stats = CacheStats()
+        # delta lineage: new fingerprint -> the fingerprint its warm
+        # entries migrated from (most recent delta only)
+        self.lineage: Dict[str, str] = {}
 
     # ---------------------------------------------------------- plumbing --
     def _get(self, key: Tuple):
@@ -107,8 +112,7 @@ class SemanticGraphCache:
     def relations_for(self, fp: str) -> Dict[str, Relation]:
         """Every cached semantic graph for one topology (no stats impact) —
         the cache-aware planner's preloaded set."""
-        return {k[2]: v for k, v in self._store.items()
-                if k[0] == "rel" and k[1] == fp}
+        return {k[2]: v for k, v in self._store.items() if k[0] == "rel" and k[1] == fp}
 
     def put_relation(self, fp: str, metapath: str, rel: Relation) -> None:
         self._put(("rel", fp, metapath), rel)
@@ -119,20 +123,57 @@ class SemanticGraphCache:
         return self._get(("rst", fp, metapath, degree_order, affinity))
 
     def put_restructured(
-        self, fp: str, metapath: str, degree_order: bool, affinity: str,
-        rg: RestructuredGraph,
+        self, fp: str, metapath: str, degree_order: bool, affinity: str, rg: RestructuredGraph
     ) -> None:
         self._put(("rst", fp, metapath, degree_order, affinity), rg)
 
-    def get_packed(self, fp: str, metapath: str, degree_order: bool,
-                   affinity: str, renumbered: bool):
-        return self._get(("pkd", fp, metapath, degree_order, affinity,
-                          renumbered))
+    def get_packed(
+        self, fp: str, metapath: str, degree_order: bool, affinity: str, renumbered: bool
+    ):
+        return self._get(("pkd", fp, metapath, degree_order, affinity, renumbered))
 
-    def put_packed(self, fp: str, metapath: str, degree_order: bool,
-                   affinity: str, renumbered: bool, packed) -> None:
-        self._put(("pkd", fp, metapath, degree_order, affinity, renumbered),
-                  packed)
+    def put_packed(
+        self,
+        fp: str,
+        metapath: str,
+        degree_order: bool,
+        affinity: str,
+        renumbered: bool,
+        packed,
+    ) -> None:
+        self._put(("pkd", fp, metapath, degree_order, affinity, renumbered), packed)
+
+    # ------------------------------------------------------ delta lineage --
+    def migrate(self, fp_old: str, fp_new: str, keep) -> Tuple[int, Dict[Tuple, object]]:
+        """Re-key one topology's warm entries after a graph delta.
+
+        Every entry under ``fp_old`` whose metapath satisfies ``keep(mp)``
+        (i.e. no hop crosses a touched relation — its products are
+        unchanged by the delta) moves in place to ``fp_new``; touched
+        entries are *removed* and handed back keyed by their full old key,
+        so the delta path can consume them as prior state (old semantic
+        graphs seed the incremental composition, old packings seed the
+        block splice) instead of letting them rot under a fingerprint
+        nobody will ask for again.  Records ``fp_new -> fp_old`` lineage
+        and counts migrations; moved entries refresh to most-recently-used
+        (a delta is evidence the tenant is live).
+
+        Returns ``(moved_count, stale)`` where ``stale`` maps old cache
+        keys of touched entries to their values.
+        """
+        moved = 0
+        stale: Dict[Tuple, object] = {}
+        for key in [k for k in self._store if k[1] == fp_old]:
+            val = self._store.pop(key)
+            if keep(key[2]):
+                self._store[(key[0], fp_new) + key[2:]] = val
+                moved += 1
+            else:
+                stale[key] = val
+        self.stats.migrations += moved
+        if moved or stale:
+            self.lineage[fp_new] = fp_old
+        return moved, stale
 
 
 _DEFAULT: Optional[SemanticGraphCache] = None

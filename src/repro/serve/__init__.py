@@ -17,6 +17,7 @@ from repro.serve.hgnn import (
     HGNNResponse,
     HGNNServeEngine,
     QuotaExceeded,
+    TenantHandle,
 )
 
 __all__ = [
@@ -29,6 +30,7 @@ __all__ = [
     "HGNNRequest",
     "HGNNResponse",
     "HGNNServeEngine",
+    "TenantHandle",
     "FaultInjector",
     "TransientFault",
     "PermanentFault",

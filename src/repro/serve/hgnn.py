@@ -33,7 +33,19 @@ Serving has three layers:
 * **The loop** — ``run()`` drives ``step()`` from a background thread so
   submitters never block on compute; ``stop()`` drains and joins.
   ``swap_params()`` atomically installs freshly trained parameters into a
-  live registration, bumping a version stamped on every response.
+  live registration, bumping a version stamped on every response;
+  ``swap_graph()`` does the same for the *topology* — a ``GraphDelta``
+  flows through the session's incremental frontend path
+  (``Session.compile_delta``: cache migration, incremental SGB,
+  block-splice repack) and the successor compiled model is installed
+  under the same version stamp, carrying the jitted dependency executor
+  forward so unchanged bucket signatures never retrace.
+
+``register()`` returns a :class:`TenantHandle` — the per-tenant surface
+(``submit`` / ``swap_params`` / ``swap_graph`` / ``stats``) that replaces
+name-string dispatch; the engine's string-keyed ``swap_params(name, ...)``
+and ``swap_graph(name, ...)`` remain as thin delegating shims that emit
+``DeprecationWarning``.
 
 On top of those sits the **fault-tolerance layer** — the invariant it
 maintains is *an admitted request's future always resolves*: to a
@@ -78,15 +90,16 @@ import collections
 import dataclasses
 import threading
 import time
+import warnings
 from concurrent.futures import Future, InvalidStateError
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.api.session import (CompiledHGNN, Session, canonical_node_ids,
-                               device_features)
+from repro.api.session import CompiledHGNN, Session, canonical_node_ids, device_features
 from repro.api.spec import ExecutorSpec, ServePolicy
 from repro.core.hgnn.models import HGNNConfig
+from repro.hetero.delta import GraphDelta
 from repro.hetero.graph import HetGraph
 from repro.serve.faults import FaultInjector, is_transient
 
@@ -164,8 +177,7 @@ class _TokenBucket:
         self.stamp = now
 
     def refill(self, now: float) -> None:
-        self.tokens = min(self.burst,
-                          self.tokens + (now - self.stamp) * self.rate)
+        self.tokens = min(self.burst, self.tokens + (now - self.stamp) * self.rate)
         self.stamp = now
 
     def take(self, n: int) -> None:
@@ -204,8 +216,7 @@ class _Breaker:
         self.consecutive = 0
         self.last_error = None
 
-    def record_failure(self, exc: BaseException, threshold: int,
-                       now: float) -> None:
+    def record_failure(self, exc: BaseException, threshold: int, now: float) -> None:
         self.consecutive += 1
         self.last_error = exc
         if self.state == "half_open" or self.consecutive >= threshold:
@@ -238,15 +249,18 @@ class HGNNRequest:
     batch.  A value <= 0 is already expired at ``submit`` and fails
     fast there.
 
+    ``graph`` may be left empty when submitting through a
+    :class:`TenantHandle` (the handle fills in its registration name);
+    ``HGNNServeEngine.submit`` requires it.
+
     Example::
 
-        engine.submit(HGNNRequest(rid=0, graph="acm",
-                                  nodes=np.array([3, 14, 15]),
+        handle.submit(HGNNRequest(rid=0, nodes=np.array([3, 14, 15]),
                                   deadline_ms=500.0))
     """
 
     rid: int
-    graph: str  # registration name
+    graph: str = ""  # registration name; "" = filled by a TenantHandle
     nodes: Optional[np.ndarray] = None
     deadline_ms: Optional[float] = None
 
@@ -288,6 +302,7 @@ class _Registration:
     name: str
     fingerprint: str
     compiled: CompiledHGNN
+    graph: HetGraph  # the live topology (swap_graph advances it)
     features: Dict
     params: Dict
     version: int = 1
@@ -305,8 +320,7 @@ class _Pending:
     deadline: Optional[float] = None  # absolute perf_counter seconds
 
 
-def _deliver(fut: Future, *, result=None, exc: Optional[Exception] = None
-             ) -> None:
+def _deliver(fut: Future, *, result=None, exc: Optional[Exception] = None) -> None:
     # a client cancel() can win the race at any point before delivery;
     # set_result/set_exception on a cancelled future raises, and that
     # must not take down the rest of the drained batch
@@ -317,6 +331,165 @@ def _deliver(fut: Future, *, result=None, exc: Optional[Exception] = None
             fut.set_result(result)
     except InvalidStateError:
         pass
+
+
+class TenantHandle:
+    """One registration's serving surface, returned by
+    ``HGNNServeEngine.register``.
+
+    The handle closes over its registration name, so call sites stop
+    threading name strings through every operation::
+
+        acm = engine.register("acm", graph, ["APA", "PAP"], cfg)
+        fut = acm.submit(HGNNRequest(0, nodes=ids))
+        acm.swap_params(trained)          # hot-swap parameters
+        acm.swap_graph(delta)             # hot-swap topology (GraphDelta)
+        print(acm.stats()["served"], acm.version)
+
+    The engine's string-keyed ``swap_params(name, ...)`` /
+    ``swap_graph(name, ...)`` survive as deprecated shims that delegate
+    here.
+    """
+
+    __slots__ = ("engine", "name")
+
+    def __init__(self, engine: "HGNNServeEngine", name: str):
+        """Bind to ``engine``'s registration ``name`` (``register`` builds
+        handles; constructing one directly is fine for an existing
+        registration)."""
+        self.engine = engine
+        self.name = name
+
+    def __repr__(self) -> str:
+        """``TenantHandle('acm')`` — the bound registration name."""
+        return f"TenantHandle({self.name!r})"
+
+    def _reg(self) -> _Registration:
+        """The live registration (engine-lock-guarded lookup)."""
+        with self.engine._lock:
+            reg = self.engine._registered.get(self.name)
+            if reg is None:
+                raise KeyError(
+                    f"graph {self.name!r} not registered "
+                    f"(have {sorted(self.engine._registered)})"
+                )
+            return reg
+
+    @property
+    def compiled(self) -> CompiledHGNN:
+        """The registration's current compiled model (advances on
+        ``swap_graph``)."""
+        return self._reg().compiled
+
+    @property
+    def version(self) -> int:
+        """The registration's current version stamp (bumped by both
+        ``swap_params`` and ``swap_graph``)."""
+        return self._reg().version
+
+    @property
+    def fingerprint(self) -> str:
+        """The registration's current topology fingerprint."""
+        return self._reg().fingerprint
+
+    def submit(
+        self, requests: Union[HGNNRequest, Sequence[HGNNRequest]]
+    ) -> "Union[Future[HGNNResponse], List[Future[HGNNResponse]]]":
+        """Submit requests against this registration (see
+        ``HGNNServeEngine.submit`` for admission semantics).
+
+        Requests may leave ``graph`` empty — the handle fills in its
+        name — but a non-empty ``graph`` naming a *different*
+        registration is rejected (use ``engine.submit`` for mixed-tenant
+        batches).
+
+        Example::
+
+            fut = handle.submit(HGNNRequest(0, nodes=np.array([3, 7])))
+        """
+        single = isinstance(requests, HGNNRequest)
+        reqs = [requests] if single else list(requests)
+        bound = []
+        for r in reqs:
+            if not r.graph:
+                r = dataclasses.replace(r, graph=self.name)
+            elif r.graph != self.name:
+                raise ValueError(
+                    f"request {r.rid}: graph {r.graph!r} does not match "
+                    f"this handle's registration {self.name!r} (use "
+                    f"engine.submit for mixed-tenant batches)"
+                )
+            bound.append(r)
+        out = self.engine.submit(bound)
+        return out[0] if single else out
+
+    def swap_params(self, params: Dict) -> int:
+        """Atomically install new parameters; returns the bumped version
+        (see the engine docs for in-flight/version semantics).
+
+        Example::
+
+            v = handle.swap_params(out["state"].params)
+        """
+        return self.engine._do_swap_params(self.name, params)
+
+    def swap_graph(self, delta: GraphDelta, *, warm: bool = False) -> int:
+        """Atomically install a delta-mutated topology; returns the
+        bumped version.
+
+        The delta flows through the session's incremental frontend path
+        (``Session.compile_delta``): warm cache entries for untouched
+        metapaths migrate in place, touched semantic graphs recompose
+        incrementally, packings splice, and the successor compiled model
+        keeps the jitted dependency executor — requests whose closures
+        keep their bucket signature cost zero new traces.  In-flight
+        groups are unaffected: serving snapshots
+        ``(compiled, features, params, version)`` atomically, so each
+        group runs entirely pre- or entirely post-swap.  ``warm=True``
+        additionally runs one full forward on the successor before
+        installing it (steady-state latency at the price of a slower
+        swap).
+
+        Example::
+
+            delta = GraphDelta.insert("PS", src, dst)
+            v = handle.swap_graph(delta)
+        """
+        return self.engine._do_swap_graph(self.name, delta, warm=warm)
+
+    def stats(self) -> Dict:
+        """This registration's serving counters plus its live version,
+        fingerprint, and breaker state (the per-tenant slice of
+        ``engine.stats()["tenants"]``).
+
+        Example::
+
+            assert handle.stats()["served"] >= 0
+        """
+        with self.engine._lock:
+            reg = self.engine._registered.get(self.name)
+            if reg is None:
+                raise KeyError(
+                    f"graph {self.name!r} not registered "
+                    f"(have {sorted(self.engine._registered)})"
+                )
+            return _tenant_stats_dict(reg)
+
+
+def _tenant_stats_dict(reg: _Registration) -> Dict:
+    """One registration's stats slice (caller holds the engine lock)."""
+    return {
+        "submitted": reg.tstats.submitted,
+        "served": reg.tstats.served,
+        "rejected_quota": reg.tstats.rejected_quota,
+        "deadline_exceeded": reg.tstats.deadline_exceeded,
+        "failures": reg.tstats.failures,
+        "retries": reg.tstats.retries,
+        "breaker_fastfails": reg.tstats.breaker_fastfails,
+        "breaker": reg.breaker.state,
+        "version": reg.version,
+        "fingerprint": reg.fingerprint,
+    }
 
 
 class HGNNServeEngine:
@@ -333,18 +506,20 @@ class HGNNServeEngine:
         engine.stop()                                 # drain + join
     """
 
-    def __init__(self, session: Optional[Session] = None,
-                 spec: Optional[ExecutorSpec] = None,
-                 policy: Optional[ServePolicy] = None,
-                 faults: Optional[FaultInjector] = None):
+    def __init__(
+        self,
+        session: Optional[Session] = None,
+        spec: Optional[ExecutorSpec] = None,
+        policy: Optional[ServePolicy] = None,
+        faults: Optional[FaultInjector] = None,
+    ):
         """Build an engine over an existing ``Session`` (to share its
         caches) or a fresh one from ``spec``; ``policy`` tunes admission
         and batching (see ``repro.api.ServePolicy``); ``faults`` threads
         a ``FaultInjector`` through the serving path (chaos testing —
         the default is a no-op)."""
         if session is not None and spec is not None:
-            raise ValueError("pass a Session or a spec for a fresh one, "
-                             "not both")
+            raise ValueError("pass a Session or a spec for a fresh one, not both")
         self.session = session if session is not None else Session(spec)
         self.policy = policy if policy is not None else ServePolicy()
         self.faults = faults
@@ -370,25 +545,33 @@ class HGNNServeEngine:
         self._degraded_steps = 0
         # bounded: a long-lived engine must not grow a per-request list
         # forever; percentiles come from the most recent window
-        self._latencies_us: "collections.deque[float]" = collections.deque(
-            maxlen=4096)
-        self._queue_us: "collections.deque[float]" = collections.deque(
-            maxlen=4096)
-        self._compute_us: "collections.deque[float]" = collections.deque(
-            maxlen=4096)
+        self._latencies_us: "collections.deque[float]" = collections.deque(maxlen=4096)
+        self._queue_us: "collections.deque[float]" = collections.deque(maxlen=4096)
+        self._compute_us: "collections.deque[float]" = collections.deque(maxlen=4096)
 
     # ---------------------------------------------------------- tenants --
-    def register(self, name: str, graph: HetGraph, targets: Sequence[str],
-                 cfg: HGNNConfig, *, params: Optional[Dict] = None,
-                 seed: int = 0, features: Optional[Dict] = None,
-                 warm: bool = True) -> CompiledHGNN:
+    def register(
+        self,
+        name: str,
+        graph: HetGraph,
+        targets: Sequence[str],
+        cfg: HGNNConfig,
+        *,
+        params: Optional[Dict] = None,
+        seed: int = 0,
+        features: Optional[Dict] = None,
+        warm: bool = True,
+    ) -> TenantHandle:
         """Register a tenant: compile (cache-served through the shared
         session) and pin features + parameters.  ``warm=True`` runs one
         forward so serving latency is steady-state, never jit compile.
+        Returns the tenant's :class:`TenantHandle` — the per-registration
+        surface for ``submit``/``swap_params``/``swap_graph``/``stats``.
 
         Example::
 
-            compiled = engine.register("acm", graph, ["APA", "PAP"], cfg)
+            acm = engine.register("acm", graph, ["APA", "PAP"], cfg)
+            fut = acm.submit(HGNNRequest(0, nodes=ids))
         """
         with self._lock:
             if name in self._registered:
@@ -399,18 +582,19 @@ class HGNNServeEngine:
             params = compiled.init(seed)
         bucket = None
         if self.policy.tenant_rate is not None:
-            bucket = _TokenBucket(self.policy.tenant_rate,
-                                  self.policy.effective_burst,
-                                  time.perf_counter())
-        reg = _Registration(name, graph.fingerprint(), compiled, feats,
-                            params, bucket=bucket)
+            bucket = _TokenBucket(
+                self.policy.tenant_rate, self.policy.effective_burst, time.perf_counter()
+            )
+        reg = _Registration(
+            name, graph.fingerprint(), compiled, graph, feats, params, bucket=bucket
+        )
         if warm:
             compiled.forward(params, feats).block_until_ready()
         with self._lock:
             if name in self._registered:
                 raise ValueError(f"graph {name!r} already registered")
             self._registered[name] = reg
-        return compiled
+        return TenantHandle(self, name)
 
     @property
     def registered(self) -> List[str]:
@@ -418,10 +602,11 @@ class HGNNServeEngine:
         with self._lock:
             return sorted(self._registered)
 
-    def swap_params(self, name: str, params: Dict) -> int:
-        """Atomically install new parameters into a live registration —
-        e.g. straight out of ``compiled.fit`` — and return the bumped
-        version.  In-flight requests are served by whichever version a
+    def _do_swap_params(self, name: str, params: Dict) -> int:
+        """Install new parameters into a live registration and return the
+        bumped version (the implementation behind
+        ``TenantHandle.swap_params`` and the deprecated string-keyed
+        shim).  In-flight requests are served by whichever version a
         ``step()`` snapshots; every response stamps the version that
         produced it, and versions observed in service order are
         monotonically non-decreasing.
@@ -430,21 +615,103 @@ class HGNNServeEngine:
         circuit breaker: if the old ones were the reason it opened, the
         very next request probes the fresh set instead of waiting out
         the cooldown.
-
-        Example::
-
-            out = compiled.fit(feats, labels, masks, epochs=50)
-            v = engine.swap_params("acm", out["state"].params)
         """
         with self._lock:
             reg = self._registered.get(name)
             if reg is None:
-                raise KeyError(f"graph {name!r} not registered "
-                               f"(have {sorted(self._registered)})")
+                raise KeyError(
+                    f"graph {name!r} not registered " f"(have {sorted(self._registered)})"
+                )
             reg.params = params
             reg.version += 1
             reg.breaker.record_success()  # new params: breaker resets
             return reg.version
+
+    def swap_params(self, name: str, params: Dict) -> int:
+        """Deprecated string-keyed shim: use
+        ``TenantHandle.swap_params(params)`` instead (the handle is what
+        ``register`` returns).
+
+        Example::
+
+            v = handle.swap_params(out["state"].params)  # preferred
+        """
+        warnings.warn(
+            "HGNNServeEngine.swap_params(name, params) is deprecated; "
+            "use the TenantHandle returned by register(): "
+            "handle.swap_params(params)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._do_swap_params(name, params)
+
+    def _do_swap_graph(self, name: str, delta: GraphDelta, *, warm: bool = False) -> int:
+        """Apply a ``GraphDelta`` to a live registration and return the
+        bumped version (the implementation behind
+        ``TenantHandle.swap_graph`` and the deprecated string-keyed
+        shim).
+
+        The heavy work — ``Session.compile_delta``'s cache migration,
+        incremental SGB, splice repack, and successor compile — runs
+        *outside* the engine lock; the installation of
+        ``(graph, compiled, features, fingerprint, version)`` is one
+        atomic update under it.  Serving snapshots the same tuple
+        atomically per group, so every group runs entirely pre- or
+        entirely post-swap and in-flight futures still resolve.  A
+        concurrent ``swap_graph`` on the same registration loses the
+        race and raises ``RuntimeError`` (its delta was computed against
+        a superseded topology).
+
+        Feature arrays are carried over unchanged unless the delta adds
+        vertices (then the successor graph's zero-extended features are
+        re-uploaded).  Like ``swap_params``, a successful topology swap
+        resets the circuit breaker.
+        """
+        with self._lock:
+            reg = self._registered.get(name)
+            if reg is None:
+                raise KeyError(
+                    f"graph {name!r} not registered " f"(have {sorted(self._registered)})"
+                )
+            graph, compiled, params = reg.graph, reg.compiled, reg.params
+        successor, new_graph, _ = self.session.compile_delta(compiled, graph, delta)
+        if delta.add_vertices:
+            feats = device_features(new_graph)
+        else:
+            feats = reg.features
+        if warm:
+            successor.forward(params, feats).block_until_ready()
+        with self._lock:
+            if reg.compiled is not compiled:
+                raise RuntimeError(
+                    f"registration {name!r}: a concurrent swap_graph "
+                    f"superseded this delta's base topology"
+                )
+            reg.graph = new_graph
+            reg.compiled = successor
+            reg.features = feats
+            reg.fingerprint = successor.fingerprint
+            reg.version += 1
+            reg.breaker.record_success()  # fresh topology: breaker resets
+            return reg.version
+
+    def swap_graph(self, name: str, delta: GraphDelta, *, warm: bool = False) -> int:
+        """Deprecated string-keyed shim: use
+        ``TenantHandle.swap_graph(delta)`` instead (the handle is what
+        ``register`` returns).
+
+        Example::
+
+            v = handle.swap_graph(GraphDelta.insert("PS", src, dst))
+        """
+        warnings.warn(
+            "HGNNServeEngine.swap_graph(name, delta) is deprecated; "
+            "use the TenantHandle returned by register(): "
+            "handle.swap_graph(delta)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._do_swap_graph(name, delta, warm=warm)
 
     def _fire(self, site: str) -> None:
         """Fault-injection hook: delegate to the engine's injector, a
@@ -453,19 +720,18 @@ class HGNNServeEngine:
             self.faults.fire(site)
 
     # --------------------------------------------------------- admission --
-    def _canonical_nodes(self, reg: _Registration, rid: int,
-                         nodes) -> Optional[np.ndarray]:
+    def _canonical_nodes(self, reg: _Registration, rid: int, nodes) -> Optional[np.ndarray]:
         """Validate and canonicalize one request's node ids at admission
         (int dtype, 1-D, non-empty, in-bounds — one shared validator
         with ``forward_subset``) so a bad id fails the ``submit`` call,
         never a batch mid-``step``."""
         if nodes is None:
             return None
-        return canonical_node_ids(nodes, reg.compiled.num_target,
-                                  ctx=f"request {rid}: nodes")
+        return canonical_node_ids(nodes, reg.compiled.num_target, ctx=f"request {rid}: nodes")
 
-    def submit(self, requests: Union[HGNNRequest, Sequence[HGNNRequest]],
-               ) -> "Union[Future[HGNNResponse], List[Future[HGNNResponse]]]":
+    def submit(
+        self, requests: Union[HGNNRequest, Sequence[HGNNRequest]]
+    ) -> "Union[Future[HGNNResponse], List[Future[HGNNResponse]]]":
         """Validate and enqueue requests; returns one future per request
         (a single future for a single request) that resolves to its
         :class:`HGNNResponse` when a ``step()`` — the background loop's or
@@ -503,7 +769,8 @@ class HGNNServeEngine:
                 self._rejected += len(reqs)
             raise AdmissionError(
                 f"batch of {len(reqs)} can never fit the admission "
-                f"queue (max_queue={self.policy.max_queue})")
+                f"queue (max_queue={self.policy.max_queue})"
+            )
         with self._lock:
             if self._draining:
                 raise AdmissionError("engine is stopping; admission closed")
@@ -513,7 +780,8 @@ class HGNNServeEngine:
                 if reg is None:
                     raise KeyError(
                         f"request {r.rid}: graph {r.graph!r} not registered "
-                        f"(have {sorted(self._registered)})")
+                        f"(have {sorted(self._registered)})"
+                    )
                 regs.append(reg)
             # per-tenant token-bucket admission, atomic across the batch:
             # refill every touched bucket, check them all, then consume —
@@ -536,24 +804,25 @@ class HGNNServeEngine:
                             f"tenant {name!r} over its admission rate "
                             f"({bucket.tokens:.1f} tokens for {n} "
                             f"requests; rate={self.policy.tenant_rate}/s "
-                            f"burst={self.policy.effective_burst})")
+                            f"burst={self.policy.effective_burst})"
+                        )
                 for name, n in share.items():
                     by_name[name].bucket.take(n)
         # the O(n) id scans run outside the lock (registrations are never
         # removed): a large batch must not stall the serving loop
-        pendings = [(r, reg, self._canonical_nodes(reg, r.rid, r.nodes))
-                    for r, reg in zip(reqs, regs)]
+        pendings = [
+            (r, reg, self._canonical_nodes(reg, r.rid, r.nodes)) for r, reg in zip(reqs, regs)
+        ]
         with self._lock:
             epoch = self._stop_epoch
             while len(self._queue) + len(reqs) > self.policy.max_queue:
                 if self.policy.backpressure == "reject":
                     self._rejected += len(reqs)
                     raise AdmissionError(
-                        f"admission queue full ({len(self._queue)}/"
-                        f"{self.policy.max_queue} queued)")
+                        f"admission queue full ({len(self._queue)}/{self.policy.max_queue} queued)"
+                    )
                 if self._draining or self._stop_epoch != epoch:
-                    raise AdmissionError(
-                        "engine is stopping; admission closed")
+                    raise AdmissionError("engine is stopping; admission closed")
                 # untimed: step()'s drain and stop() notify this
                 # condition on every state change, so no poll interval
                 self._queue_drained.wait()
@@ -569,15 +838,17 @@ class HGNNServeEngine:
                 fut: "Future[HGNNResponse]" = Future()
                 futures.append(fut)
                 reg.tstats.submitted += 1
-                dl_ms = (r.deadline_ms if r.deadline_ms is not None
-                         else self.policy.deadline_ms)
+                dl_ms = r.deadline_ms if r.deadline_ms is not None else self.policy.deadline_ms
                 if dl_ms is not None and dl_ms <= 0:
                     # already expired at submit: fail fast, never enqueue
                     reg.tstats.deadline_exceeded += 1
                     self._deadline_exceeded += 1
-                    _deliver(fut, exc=DeadlineExceeded(
-                        f"request {r.rid}: deadline_ms={dl_ms} already "
-                        f"expired at submit"))
+                    _deliver(
+                        fut,
+                        exc=DeadlineExceeded(
+                            f"request {r.rid}: deadline_ms={dl_ms} already expired at submit"
+                        ),
+                    )
                     continue
                 deadline = None if dl_ms is None else now + dl_ms / 1e3
                 self._queue.append(_Pending(r, nodes, now, fut, deadline))
@@ -587,16 +858,25 @@ class HGNNServeEngine:
         return futures[0] if single else futures
 
     # ----------------------------------------------------------- serving --
-    def _serve_group(self, reg: _Registration, group: List[_Pending],
-                     params: Dict, version: int,
-                     subset_mode: Optional[str] = None
-                     ) -> List[HGNNResponse]:
+    def _serve_group(
+        self,
+        reg: _Registration,
+        group: List[_Pending],
+        compiled: CompiledHGNN,
+        features: Dict,
+        params: Dict,
+        version: int,
+        subset_mode: Optional[str] = None,
+    ) -> List[HGNNResponse]:
         """One compiled forward for every pending request of one
         registration: a subset path (head-only or k-hop dependency, per
         ``ServePolicy.subset_mode``) when every request names ids whose
         union coverage is within policy, the full-graph forward
         otherwise.  Exactly one device->host transfer and one gather per
-        request either way.  ``subset_mode`` overrides the policy's for
+        request either way.  ``compiled``/``features``/``params``/
+        ``version`` are the caller's atomic registration snapshot, so a
+        racing ``swap_params``/``swap_graph`` serves entirely pre- or
+        entirely post-swap.  ``subset_mode`` overrides the policy's for
         this attempt — the degradation ladder passes ``"head"`` under
         queue pressure.  Fault-injection sites (``_fire``): ``extract``
         before the closure extraction, ``forward`` before the compiled
@@ -606,38 +886,41 @@ class HGNNServeEngine:
         union = None
         if all(n is not None for n in nodes_list):
             union = np.unique(np.concatenate(nodes_list))
-            coverage = union.size / max(1, reg.compiled.num_target)
+            coverage = union.size / max(1, compiled.num_target)
             if coverage > self.policy.subset_threshold:
                 union = None
-        effective_mode = (subset_mode if subset_mode is not None
-                          else self.policy.subset_mode)
+        effective_mode = subset_mode if subset_mode is not None else self.policy.subset_mode
         mode = "full"
         if union is not None:
             # union ids were canonicalized at admission; skip re-scanning
             # them inside the timed serving window
             if effective_mode == "dependency":
                 self._fire("extract")
-                sub = reg.compiled.dependency_subset(
-                    union, bucket_min=self.policy.bucket_min,
-                    validate=False)
+                sub = compiled.dependency_subset(
+                    union, bucket_min=self.policy.bucket_min, validate=False
+                )
                 if sub.coverage <= self.policy.dependency_threshold:
                     self._fire("forward")
-                    logits = reg.compiled.forward_subset(
-                        params, reg.features, union,
-                        bucket_min=self.policy.bucket_min, validate=False,
-                        mode="dependency")
+                    logits = compiled.forward_subset(
+                        params,
+                        features,
+                        union,
+                        bucket_min=self.policy.bucket_min,
+                        validate=False,
+                        mode="dependency",
+                    )
                     mode = "dependency"
                 else:
                     union = None  # closure blew up: full forward wins
             else:
                 self._fire("forward")
-                logits = reg.compiled.forward_subset(
-                    params, reg.features, union,
-                    bucket_min=self.policy.bucket_min, validate=False)
+                logits = compiled.forward_subset(
+                    params, features, union, bucket_min=self.policy.bucket_min, validate=False
+                )
                 mode = "subset"
         if union is None:
             self._fire("forward")
-            logits = reg.compiled.forward(params, reg.features)
+            logits = compiled.forward(params, features)
         logits.block_until_ready()
         self._fire("host_transfer")
         done = time.perf_counter()
@@ -655,18 +938,20 @@ class HGNNServeEngine:
                 rows = host_logits[p.nodes]  # the one gather per request
                 preds = rows.argmax(-1)
             queue_us = (t_start - p.t_admit) * 1e6
-            responses.append(HGNNResponse(
-                rid=p.req.rid,
-                graph=reg.name,
-                logits=rows,
-                predictions=preds,
-                latency_us=(done - p.t_admit) * 1e6,
-                batched_with=len(group),
-                queue_us=queue_us,
-                compute_us=compute_us,
-                params_version=version,
-                mode=mode,
-            ))
+            responses.append(
+                HGNNResponse(
+                    rid=p.req.rid,
+                    graph=reg.name,
+                    logits=rows,
+                    predictions=preds,
+                    latency_us=(done - p.t_admit) * 1e6,
+                    batched_with=len(group),
+                    queue_us=queue_us,
+                    compute_us=compute_us,
+                    params_version=version,
+                    mode=mode,
+                )
+            )
         with self._lock:
             # stats mutate under the lock: step() may legally run from a
             # direct caller concurrently with the background loop
@@ -684,8 +969,7 @@ class HGNNServeEngine:
             reg.tstats.served += len(group)
         return responses
 
-    def _serve_with_recovery(self, name: str, group: List[_Pending],
-                             degraded: bool):
+    def _serve_with_recovery(self, name: str, group: List[_Pending], degraded: bool):
         """Serve one registration's group through the recovery ladder;
         returns ``(responses, error)`` where exactly one is ``None`` —
         except the all-futures-expired case, which returns ``(None,
@@ -721,17 +1005,23 @@ class HGNNServeEngine:
                     reg.tstats.deadline_exceeded += len(expired)
                     self._deadline_exceeded += len(expired)
                 for p in expired:
-                    _deliver(p.future, exc=DeadlineExceeded(
-                        f"request {p.req.rid}: deadline expired while "
-                        f"queued ({(now - p.t_admit) * 1e3:.1f} ms since "
-                        f"admission)"))
+                    _deliver(
+                        p.future,
+                        exc=DeadlineExceeded(
+                            f"request {p.req.rid}: deadline expired while "
+                            f"queued ({(now - p.t_admit) * 1e3:.1f} ms since "
+                            f"admission)"
+                        ),
+                    )
             group = alive
             if not group:
                 return None, None
             with self._lock:
-                # snapshot (params, version) as one atomic pair: a racing
-                # swap_params either fully serves this group or the next
+                # snapshot (compiled, features, params, version) as one
+                # atomic tuple: a racing swap_params/swap_graph either
+                # fully serves this group or the next
                 reg = self._registered[name]
+                compiled, features = reg.compiled, reg.features
                 params, version = reg.params, reg.version
                 allowed = reg.breaker.allow(now, cooldown_s)
                 if not allowed:
@@ -740,30 +1030,32 @@ class HGNNServeEngine:
                     err: Exception = CircuitOpen(
                         f"registration {name!r}: breaker open after "
                         f"{reg.breaker.consecutive} consecutive failures "
-                        f"(last: {reg.breaker.last_error!r})")
+                        f"(last: {reg.breaker.last_error!r})"
+                    )
             if not allowed:
                 for p in group:
                     _deliver(p.future, exc=err)
                 return None, err
             try:
-                responses = self._serve_group(reg, group, params, version,
-                                              subset_mode=subset_mode)
+                responses = self._serve_group(
+                    reg, group, compiled, features, params, version, subset_mode=subset_mode
+                )
             except Exception as e:
                 with self._lock:
                     reg.breaker.record_failure(
-                        e, self.policy.breaker_threshold,
-                        time.perf_counter())
+                        e, self.policy.breaker_threshold, time.perf_counter()
+                    )
                     reg.tstats.failures += 1
-                    retry = (is_transient(e)
-                             and attempt < self.policy.max_retries)
+                    retry = is_transient(e) and attempt < self.policy.max_retries
                     if retry:
                         self._retries += 1
                         reg.tstats.retries += 1
                 if retry:
                     attempt += 1
-                    backoff_ms = min(self.policy.retry_backoff_cap_ms,
-                                     self.policy.retry_backoff_ms
-                                     * 2 ** (attempt - 1))
+                    backoff_ms = min(
+                        self.policy.retry_backoff_cap_ms,
+                        self.policy.retry_backoff_ms * 2 ** (attempt - 1),
+                    )
                     if backoff_ms > 0:
                         time.sleep(backoff_ms / 1e3)
                     continue
@@ -809,15 +1101,17 @@ class HGNNServeEngine:
             pressure = len(self._queue) / self.policy.max_queue
             queue, self._queue = self._queue, []
             self._queue_drained.notify_all()
-            degraded = (self.policy.subset_mode == "dependency"
-                        and pressure >= self.policy.degrade_pressure)
+            degraded = (
+                self.policy.subset_mode == "dependency"
+                and pressure >= self.policy.degrade_pressure
+            )
             if degraded:
                 self._degraded_steps += 1
         # fingerprint-major grouping; stable, so per-tenant FIFO holds
         order = sorted(
             range(len(queue)),
-            key=lambda i: (self._registered[queue[i].req.graph].fingerprint,
-                           queue[i].req.graph))
+            key=lambda i: (self._registered[queue[i].req.graph].fingerprint, queue[i].req.graph),
+        )
         responses: List[HGNNResponse] = []
         first_error: Optional[Exception] = None
         i = 0
@@ -827,8 +1121,7 @@ class HGNNServeEngine:
             while i < len(order) and queue[order[i]].req.graph == name:
                 group.append(queue[order[i]])
                 i += 1
-            group_responses, err = self._serve_with_recovery(
-                name, group, degraded)
+            group_responses, err = self._serve_with_recovery(name, group, degraded)
             if err is not None and first_error is None:
                 first_error = err
             if group_responses:
@@ -854,9 +1147,7 @@ class HGNNServeEngine:
             if self._running:
                 raise RuntimeError("admission loop already running")
             self._running = True
-            self._thread = threading.Thread(target=self._loop,
-                                            name="hgnn-serve-loop",
-                                            daemon=True)
+            self._thread = threading.Thread(target=self._loop, name="hgnn-serve-loop", daemon=True)
             thread = self._thread
         thread.start()
 
@@ -933,12 +1224,10 @@ class HGNNServeEngine:
                   s["tenants"]["acm"]["breaker"])
         """
         def _pct(deque_, q):
-            return (float(np.percentile(np.asarray(deque_), q))
-                    if deque_ else None)
+            return float(np.percentile(np.asarray(deque_), q)) if deque_ else None
 
         with self._lock:
-            forwards = (self._forwards_full + self._forwards_subset
-                        + self._forwards_dependency)
+            forwards = self._forwards_full + self._forwards_subset + self._forwards_dependency
             return {
                 "graphs_registered": len(self._registered),
                 "requests_served": self._served,
@@ -960,17 +1249,7 @@ class HGNNServeEngine:
                 "queue_us_p50": _pct(self._queue_us, 50),
                 "compute_us_p50": _pct(self._compute_us, 50),
                 "tenants": {
-                    name: {
-                        "submitted": reg.tstats.submitted,
-                        "served": reg.tstats.served,
-                        "rejected_quota": reg.tstats.rejected_quota,
-                        "deadline_exceeded": reg.tstats.deadline_exceeded,
-                        "failures": reg.tstats.failures,
-                        "retries": reg.tstats.retries,
-                        "breaker_fastfails": reg.tstats.breaker_fastfails,
-                        "breaker": reg.breaker.state,
-                    }
-                    for name, reg in self._registered.items()
+                    name: _tenant_stats_dict(reg) for name, reg in self._registered.items()
                 },
                 "session": self.session.stats(),
             }

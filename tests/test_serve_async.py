@@ -9,8 +9,9 @@ import pytest
 
 from repro.api import ExecutorSpec, ServePolicy, Session, device_features
 from repro.core.hgnn import HGNNConfig
+from repro.hetero import GraphDelta
 from repro.serve import (AdmissionError, HGNNRequest, HGNNResponse,
-                         HGNNServeEngine)
+                         HGNNServeEngine, TenantHandle)
 
 TARGETS = ["APA", "PAP", "PSP"]
 
@@ -246,11 +247,11 @@ def test_group_failure_is_isolated(served):
     its own futures: the other drained groups are still served, and the
     sync caller sees the first error after the drain."""
     eng = HGNNServeEngine(session=served["session"])
-    eng.register("bad", served["graph"], TARGETS, _cfg(),
-                 params=served["params"])
+    bad = eng.register("bad", served["graph"], TARGETS, _cfg(),
+                       params=served["params"])
     eng.register("good", served["graph"], TARGETS, _cfg(),
                  params=served["params"])
-    eng.swap_params("bad", {"not": "params"})  # poisons the next forward
+    bad.swap_params({"not": "params"})  # poisons the next forward
     f_bad = eng.submit(HGNNRequest(0, "bad", nodes=np.array([1])))
     f_good = eng.submit(HGNNRequest(1, "good", nodes=np.array([1])))
     with pytest.raises(Exception):
@@ -275,14 +276,14 @@ def test_swap_params_changes_logits_and_version(served):
     eng.submit(HGNNRequest(0, "acm", nodes=np.array([3])))
     (before,) = eng.step()
     assert before.params_version == 1
-    v = eng.swap_params("acm", served["compiled"].init(99))
+    v = TenantHandle(eng, "acm").swap_params(served["compiled"].init(99))
     assert v == 2
     eng.submit(HGNNRequest(1, "acm", nodes=np.array([3])))
     (after,) = eng.step()
     assert after.params_version == 2
     assert not np.array_equal(before.logits, after.logits)
     with pytest.raises(KeyError, match="not registered"):
-        eng.swap_params("nope", served["params"])
+        TenantHandle(eng, "nope").swap_params(served["params"])
 
 
 def test_swap_params_version_monotonic_under_racing_submitter(served):
@@ -313,8 +314,8 @@ def test_swap_params_version_monotonic_under_racing_submitter(served):
     last_version = 1
     for seed in range(4):
         time.sleep(0.02)
-        last_version = eng.swap_params("acm",
-                                       served["compiled"].init(seed + 1))
+        last_version = TenantHandle(eng, "acm").swap_params(
+            served["compiled"].init(seed + 1))
     stop_flag.set()
     t.join(timeout=10)
     eng.stop()
@@ -322,3 +323,145 @@ def test_swap_params_version_monotonic_under_racing_submitter(served):
     assert len(versions) > 0
     assert versions == sorted(versions)  # monotone in service order
     assert all(1 <= v <= 5 for v in versions)
+
+
+# --------------------------------------------------------- graph swap --
+def _tp_delta(graph, seed=0, k=3):
+    """A cheap off-metapath delta: TP feeds none of TARGETS, so the swap
+    migrates every cached product and never recomposes."""
+    rng = np.random.default_rng(seed)
+    tp = graph.relations["TP"]
+    return GraphDelta.insert("TP", rng.integers(0, tp.num_src, k),
+                             rng.integers(0, tp.num_dst, k))
+
+
+def test_tenant_handle_submit_stats_and_name_guard(served):
+    eng = HGNNServeEngine(session=served["session"])
+    acm = eng.register("acm", served["graph"], TARGETS, _cfg(),
+                       params=served["params"])
+    assert isinstance(acm, TenantHandle)
+    fut = acm.submit(HGNNRequest(0, nodes=np.array([1, 2])))  # graph filled in
+    (resp,) = eng.step()
+    assert fut.result(timeout=5) is resp and resp.graph == "acm"
+    with pytest.raises(ValueError, match="mixed-tenant"):
+        acm.submit(HGNNRequest(1, "other", nodes=np.array([1])))
+    st = acm.stats()
+    assert st["version"] == 1 and st["fingerprint"] == acm.fingerprint
+    assert st["served"] == 1 and st["submitted"] == 1
+
+
+def test_deprecated_string_keyed_shims_warn(served):
+    eng = _engine(served)
+    with pytest.warns(DeprecationWarning, match="TenantHandle"):
+        v = eng.swap_params("acm", served["compiled"].init(5))
+    assert v == 2
+    with pytest.warns(DeprecationWarning, match="TenantHandle"):
+        with pytest.raises(KeyError, match="not registered"):
+            eng.swap_graph("nope", _tp_delta(served["graph"]))
+
+
+def test_swap_graph_bumps_version_and_serves_new_topology(served):
+    """swap_graph with an on-metapath delta: the successor's logits are
+    bitwise-equal to a cold compile of the mutated graph, responses carry
+    the bumped version, and the handle's fingerprint follows the graph."""
+    eng = HGNNServeEngine(session=served["session"])
+    acm = eng.register("acm", served["graph"], TARGETS, _cfg(),
+                       params=served["params"])
+    fp0 = acm.fingerprint
+    ps = served["graph"].relations["PS"]
+    rng = np.random.default_rng(11)
+    delta = GraphDelta.insert("PS", rng.integers(0, ps.num_src, 5),
+                              rng.integers(0, ps.num_dst, 5))
+    v = acm.swap_graph(delta)
+    assert v == 2 and acm.version == 2 and acm.fingerprint != fp0
+    fut = acm.submit(HGNNRequest(0))  # nodes=None: full-graph rows
+    (resp,) = eng.step()
+    assert fut.result(timeout=5) is resp
+    assert resp.params_version == 2
+    g2 = served["graph"].apply_delta(delta)
+    cold = Session(ExecutorSpec()).compile(g2, TARGETS, _cfg())
+    np.testing.assert_array_equal(
+        resp.logits,
+        np.asarray(cold.forward(served["params"], device_features(g2))))
+
+
+def test_swap_graph_zero_retrace_when_bucket_signature_unchanged(served):
+    """The acceptance guard: an off-metapath delta leaves every product
+    and bucket signature unchanged, so a dependency-mode group served
+    after the swap reuses the transplanted dependency forward — zero new
+    traces on the shared counter."""
+    eng = HGNNServeEngine(session=served["session"], policy=ServePolicy(
+        subset_mode="dependency", subset_threshold=0.9))
+    acm = eng.register("acm", served["graph"], TARGETS, _cfg(),
+                       params=served["params"])
+    ids = np.array([3, 1, 4], np.int64)
+    acm.submit(HGNNRequest(0, nodes=ids))
+    (before,) = eng.step()
+    assert before.mode == "dependency"
+    t0 = acm.compiled.dependency_traces
+    assert t0 > 0
+    v = acm.swap_graph(_tp_delta(served["graph"], seed=7))
+    assert v == 2
+    acm.submit(HGNNRequest(1, nodes=ids))
+    (after,) = eng.step()
+    assert after.mode == "dependency" and after.params_version == 2
+    assert acm.compiled.dependency_traces == t0  # zero new traces
+    np.testing.assert_array_equal(before.logits, after.logits)
+
+
+def test_swap_graph_mid_stream_futures_resolve_and_versions_monotone(served):
+    """swap_graph races the background loop: every in-flight future still
+    resolves, and response versions are non-decreasing in service order
+    (the (compiled, features, params, version) snapshot is atomic)."""
+    eng = HGNNServeEngine(session=served["session"])
+    acm = eng.register("acm", served["graph"], TARGETS, _cfg(),
+                       params=served["params"])
+    versions, order_lock = [], threading.Lock()
+
+    def _record(f):
+        with order_lock:
+            versions.append(f.result().params_version)
+
+    eng.run()
+    stop_flag = threading.Event()
+    futs = []
+
+    def _submitter():
+        rid = 0
+        while not stop_flag.is_set():
+            fut = acm.submit(HGNNRequest(rid, nodes=np.array([rid % 50])))
+            fut.add_done_callback(_record)
+            futs.append(fut)
+            rid += 1
+            time.sleep(0.002)
+
+    t = threading.Thread(target=_submitter)
+    t.start()
+    graph, last = served["graph"], 1
+    for seed in range(2):
+        time.sleep(0.05)
+        delta = _tp_delta(graph, seed=seed)
+        last = acm.swap_graph(delta)
+        graph = graph.apply_delta(delta)
+    stop_flag.set()
+    t.join(timeout=10)
+    eng.stop()
+    assert last == 3 and acm.version == 3
+    done = [f.result(timeout=5) for f in futs]  # every future resolved
+    assert [r.rid for r in done] == list(range(len(futs)))
+    assert len(versions) == len(futs) > 0
+    assert versions == sorted(versions)  # monotone in service order
+    assert all(1 <= v <= 3 for v in versions)
+
+
+def test_swap_graph_rejects_stale_base_topology(served):
+    """compile_delta refuses a delta built against a graph that is no
+    longer the registration's topology (the concurrent-swap guard at the
+    API layer: the fingerprint check)."""
+    eng = HGNNServeEngine(session=served["session"])
+    acm = eng.register("acm", served["graph"], TARGETS, _cfg(),
+                       params=served["params"])
+    acm.swap_graph(_tp_delta(served["graph"], seed=1))
+    # the handle's registration now holds the mutated graph; a second
+    # swap against it succeeds (deltas chain), and the version advances
+    assert acm.swap_graph(_tp_delta(served["graph"], seed=2)) == 3

@@ -17,8 +17,8 @@ from repro.api import ExecutorSpec, ServePolicy, Session, device_features
 from repro.core.hgnn import HGNNConfig
 from repro.serve import (CircuitOpen, DeadlineExceeded, FaultInjector,
                          HGNNRequest, HGNNResponse, HGNNServeEngine,
-                         PermanentFault, QuotaExceeded, TransientFault,
-                         is_transient)
+                         PermanentFault, QuotaExceeded, TenantHandle,
+                         TransientFault, is_transient)
 
 TARGETS = ["APA", "PAP", "PSP"]
 
@@ -379,7 +379,7 @@ def test_breaker_isolates_failing_tenant(served):
     same ``step()`` keeps serving."""
     eng = _engine(served, names=("bad", "good"),
                   policy=_fail_twice_policy(breaker_threshold=1))
-    eng.swap_params("bad", {"not": "params"})  # permanent TypeError
+    TenantHandle(eng, "bad").swap_params({"not": "params"})  # permanent TypeError
     f_bad = eng.submit(_req(0, name="bad"))
     f_good = eng.submit(_req(1, name="good"))
     with pytest.raises(TypeError):
@@ -400,10 +400,10 @@ def test_breaker_isolates_failing_tenant(served):
 def test_swap_params_resets_open_breaker(served):
     eng = _engine(served, policy=_fail_twice_policy(
         breaker_threshold=1, breaker_cooldown_ms=60_000.0))
-    eng.swap_params("acm", {"not": "params"})
+    TenantHandle(eng, "acm").swap_params({"not": "params"})
     _trip(eng, 1)
     assert eng.stats()["tenants"]["acm"]["breaker"] == "open"
-    eng.swap_params("acm", served["params"])  # heal: breaker resets too
+    TenantHandle(eng, "acm").swap_params(served["params"])  # heal: breaker resets too
     fut = eng.submit(_req(0))
     eng.step()  # no cooldown wait needed
     assert fut.result().rid == 0
@@ -415,7 +415,7 @@ def test_swap_params_mid_retry_heals_the_group(served):
     params is served by a swap that lands between attempts."""
     eng = _engine(served, policy=ServePolicy(
         max_retries=3, retry_backoff_ms=20.0, breaker_threshold=10))
-    eng.swap_params("acm", {"not": "params"})
+    TenantHandle(eng, "acm").swap_params({"not": "params"})
     eng.run()
     fut = eng.submit(_req(0))
     time.sleep(0.005)  # let the first attempt fail... (TypeError is
@@ -431,7 +431,7 @@ def test_swap_params_mid_retry_heals_the_group(served):
         max_retries=3, retry_backoff_ms=30.0))
     eng2.run()
     fut2 = eng2.submit(_req(1))
-    eng2.swap_params("acm", served["params"])  # lands during backoff
+    TenantHandle(eng2, "acm").swap_params(served["params"])  # lands during backoff
     resp = fut2.result(timeout=30)
     eng2.stop()
     assert resp.params_version == 2  # served by the swapped-in params
