@@ -82,6 +82,13 @@ def extract_metrics(point: Dict) -> Dict[str, float]:
         for k, r in point.get("frontend", {}).items():
             if r is not None:
                 metrics[f"frontend/{k}"] = r
+        # sharded-execution ratios: the shard_map forward vs the
+        # single-device banded forward over the same compiled workload
+        # (relation_vs_single) — gates the multi-device dispatch path
+        # against its own baseline environment
+        for k, r in point.get("shard", {}).items():
+            if r is not None:
+                metrics[f"shard/{k}"] = r
     else:
         raise ValueError(f"unknown bench schema {schema!r}")
     return metrics

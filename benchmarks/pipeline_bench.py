@@ -61,7 +61,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from benchmarks.common import row
-from repro.api import ExecutorSpec, ServePolicy, Session
+from repro.api import ExecutorSpec, ServePolicy, Session, device_features
 from repro.core.hgnn import HGNNConfig
 from repro.pipeline import FrontendPipeline, PipelineConfig, SemanticGraphCache
 from repro.serve import (DeadlineExceeded, FaultInjector, HGNNRequest,
@@ -396,6 +396,62 @@ def bench_serving(scale: float = 0.25) -> Tuple[List[str], Dict[str, float]]:
     return out, metrics
 
 
+SHARD_ITERS = 3  # timed forwards per executor (median kills outliers)
+
+
+def bench_shard(scale: float = 0.25) -> Tuple[List[str], Dict[str, float]]:
+    """Sharded vs single-device banded forward on one ACM workload.
+
+    Compiles the same rgat model twice over one shared cache — once on a
+    plain banded session, once with ``shard="relation"`` over every host
+    device — warms both jits, and reports the median-of-3 forward
+    latency each way.  The gated ``relation_vs_single`` ratio tracks the
+    shard_map path's overhead/benefit against the single-device kernels:
+    on CPU hosts (interpret kernels, forced device count) the ratio
+    measures dispatch + psum overhead, so the gate catches the sharded
+    executor *regressing* relative to its own baseline, not an absolute
+    speedup claim.  The derived column carries the plan's per-device
+    block counts and load-balance ratio.
+    """
+    import jax
+
+    from repro.pipeline.frontend import _dataset
+
+    graph = _dataset("ACM", 0, float(scale))
+    targets = ["APA", "PAP", "PSP"]
+    cfg = HGNNConfig(model="rgat", hidden=64, num_layers=2, num_classes=3,
+                     target_type="P")
+    cache = SemanticGraphCache()
+    single = Session(ExecutorSpec(na_executor="banded"), cache=cache)
+    sharded = Session(
+        ExecutorSpec(na_executor="banded", shard="relation"), cache=cache)
+    feats = device_features(graph)
+
+    def timed(compiled, params):
+        compiled.forward(params, feats).block_until_ready()  # warm the jit
+        us = []
+        for _ in range(SHARD_ITERS):
+            t0 = time.perf_counter()
+            compiled.forward(params, feats).block_until_ready()
+            us.append((time.perf_counter() - t0) * 1e6)
+        return float(np.median(us))
+
+    c_single = single.compile(graph, targets, cfg)
+    params = c_single.init(0)
+    single_us = timed(c_single, params)
+    c_shard = sharded.compile(graph, targets, cfg)
+    shard_us = timed(c_shard, params)
+    assert c_shard.shard_traces == 1, "timed round must not retrace"
+    ratio = shard_us / max(single_us, 1e-9)
+    summ = c_shard.shard_plan.summary()
+    out = [row(
+        "shard/relation_vs_single", shard_us,
+        f"devices={len(jax.devices())};single_us={single_us:.0f};"
+        f"ratio={ratio:.2f};load_balance={summ['load_balance']:.2f};"
+        f"blocks={'/'.join(str(b) for b in summ['per_device_edge_blocks'])}")]
+    return out, {"relation_vs_single": ratio}
+
+
 def main() -> None:
     scale = float(sys.argv[1]) if len(sys.argv) > 1 else 0.25
     out_json = sys.argv[2] if len(sys.argv) > 2 else None
@@ -408,9 +464,13 @@ def main() -> None:
     serve_rows, serve_metrics = bench_serving(scale)
     for line in serve_rows:
         print(line, flush=True)
+    shard_rows, shard_metrics = bench_shard(scale)
+    for line in shard_rows:
+        print(line, flush=True)
     if out_json:
         point = {"schema": "pipeline_bench/v1", "scale": scale,
-                 "serve": serve_metrics, "frontend": frontend_metrics}
+                 "serve": serve_metrics, "frontend": frontend_metrics,
+                 "shard": shard_metrics}
         with open(out_json, "w") as f:
             json.dump(point, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -32,6 +32,8 @@ import numpy as np
 from repro.api.spec import ExecutorSpec
 from repro.core.hgnn.models import HGNN, HGNNConfig
 from repro.core.subgraph import DependencyExtractor, DependencySubset
+from repro.distributed.hgnn import (ShardedHGNNExecutor, ShardPlan,
+                                    build_shard_plan)
 from repro.hetero.delta import GraphDelta
 from repro.hetero.graph import HetGraph
 from repro.pipeline.cache import SemanticGraphCache
@@ -105,6 +107,11 @@ class SessionStats:
     session's own memo without touching the pipeline at all.  The cache
     counters are cumulative for the session's ``SemanticGraphCache``
     (which may be shared with other sessions — sharing is the point).
+
+    ``shard`` is ``None`` on unsharded sessions; on sharded ones it
+    aggregates every cached plan's device loads —
+    ``stats()["shard"]["load_balance"]`` is the max-over-mean per-device
+    edge load across the session (1.0 = perfectly balanced).
     """
 
     compiles: int
@@ -116,11 +123,18 @@ class SessionStats:
     cache_evictions: int
     cache_entries: int
     cache_nbytes: int
+    shard: Optional[Dict] = None
 
     @property
     def hit_rate(self) -> float:
         """Cache hits over total lookups (e.g. ``stats.hit_rate > 0.3``)."""
         return self.cache_hits / max(1, self.cache_hits + self.cache_misses)
+
+    def __getitem__(self, key: str):
+        """Dict-style field access (``stats()["shard"]``)."""
+        if key.startswith("_") or not hasattr(self, key):
+            raise KeyError(key)
+        return getattr(self, key)
 
 
 class CompiledHGNN:
@@ -135,13 +149,21 @@ class CompiledHGNN:
     """
 
     def __init__(self, session: "Session", spec: ExecutorSpec, model: HGNN,
-                 frontend: FrontendResult, graphs: List, fingerprint: str):
+                 frontend: FrontendResult, graphs: List, fingerprint: str,
+                 shard_plan: Optional[ShardPlan] = None,
+                 devices: Optional[List] = None):
         self.session = session
         self.spec = spec
         self.model = model
         self.frontend = frontend
         self.graphs = graphs
         self.fingerprint = fingerprint
+        # multi-device execution (spec.shard != "none"): the plan is built
+        # eagerly by Session.compile (cached per fingerprint); the
+        # shard_map executor traces lazily on first forward
+        self.shard_plan = shard_plan
+        self._devices = devices
+        self._shard_exec: Optional[ShardedHGNNExecutor] = None
         self._forward = None
         self._forward_subset = None
         self._subset_traces = 0
@@ -196,6 +218,16 @@ class CompiledHGNN:
             logits = compiled.forward(params, device_features(graph))
             assert logits.shape == (compiled.num_target, cfg.num_classes)
         """
+        if self.shard_plan is not None:
+            if self._shard_exec is None:
+                with self._build_lock:
+                    if self._shard_exec is None:
+                        self._shard_exec = ShardedHGNNExecutor(
+                            self.model, self.graphs, self.shard_plan,
+                            devices=self._devices,
+                            interpret=self.spec.na_kernel_backend
+                            != "pallas")
+            return self._shard_exec.forward(params, features)
         if self._forward is None:
             with self._build_lock:
                 if self._forward is None:
@@ -222,6 +254,13 @@ class CompiledHGNN:
             assert compiled.subset_traces == before + 1
         """
         return self._subset_traces
+
+    @property
+    def shard_traces(self) -> int:
+        """How many times the sharded (``shard_map``) forward has traced —
+        the multi-device sibling of :attr:`subset_traces`: repeated
+        ``forward`` calls on a sharded compile must report 1."""
+        return self._shard_exec.traces if self._shard_exec is not None else 0
 
     @property
     def dependency_traces(self) -> int:
@@ -485,10 +524,50 @@ class Session:
                                          cache=self.cache)
         self._frontends: "OrderedDict[Tuple[str, Tuple[str, ...]], FrontendResult]" = OrderedDict()
         self._compiled: "OrderedDict[Tuple, CompiledHGNN]" = OrderedDict()
+        self._shard_plans: "OrderedDict[Tuple, ShardPlan]" = OrderedDict()
         self._frontend_runs = 0
         self._frontend_served = 0
         self._compiles = 0
         self._compiles_cached = 0
+
+    # ------------------------------------------------------------ sharding --
+    def _resolve_devices(self, devices) -> Optional[List]:
+        """Concrete device list for a sharded compile (None if unsharded).
+
+        ``devices`` may hold jax Device objects or integer indices into
+        ``jax.devices()`` (the serving engine pins tenants by index);
+        ``None`` takes every device, truncated to ``spec.mesh_shape``'s
+        size when the spec fixes one.
+        """
+        if self.spec.shard == "none":
+            return None
+        pool = jax.devices()
+        if devices is None:
+            devs = list(pool)
+            if self.spec.mesh_shape is not None:
+                want = int(np.prod(self.spec.mesh_shape))
+                if want > len(devs):
+                    raise ValueError(
+                        f"mesh_shape {self.spec.mesh_shape} needs {want} "
+                        f"devices, jax reports {len(devs)}")
+                devs = devs[:want]
+            return devs
+        return [pool[d] if isinstance(d, (int, np.integer)) else d
+                for d in devices]
+
+    def _shard_plan_for(self, fp: str, tkey: Tuple[str, ...], graphs: List,
+                        num_devices: int, feature_dim: int) -> ShardPlan:
+        """Build (or serve from the plan memo) the shard plan for a
+        fingerprinted set of banded batches over ``num_devices``."""
+        pkey = (fp, tkey, self.spec.shard, num_devices, feature_dim)
+        plan = self._shard_plans.get(pkey)
+        if plan is None:
+            plan = build_shard_plan(graphs, num_devices, self.spec.shard,
+                                    feature_dim=feature_dim)
+            self._memo_put(self._shard_plans, pkey, plan)
+        else:
+            self._shard_plans.move_to_end(pkey)
+        return plan
 
     def _memo_put(self, memo: OrderedDict, key, value) -> None:
         memo[key] = value
@@ -516,7 +595,7 @@ class Session:
 
     # ------------------------------------------------------------- compile --
     def compile(self, graph: HetGraph, targets: Sequence[str],
-                cfg: HGNNConfig) -> CompiledHGNN:
+                cfg: HGNNConfig, *, devices=None) -> CompiledHGNN:
         """Bind a model to the cached frontend products for this graph.
 
         The returned ``CompiledHGNN`` carries the batch flavor the spec's
@@ -525,9 +604,23 @@ class Session:
         ``PackedEdges`` per semantic graph for the whole session), and an
         identical ``(graph, targets, cfg)`` compile returns the same
         object — including its jitted entry points.
+
+        On a sharded spec (``spec.shard != "none"``) the shard plan is
+        built here (cached by graph fingerprint — every model over the
+        same products shares it) and ``devices`` optionally pins the
+        compile to a device group (jax Devices or indices into
+        ``jax.devices()``) — the serving engine's per-tenant pinning.
+        ``devices`` is rejected on unsharded specs.
         """
+        if devices is not None and self.spec.shard == "none":
+            raise ValueError(
+                "devices= requires a sharded spec (ExecutorSpec.shard is "
+                "'none'): an unsharded compile has no mesh to pin")
         fp = graph.fingerprint()
-        ckey = (fp, tuple(sorted(targets)), cfg)
+        devs = self._resolve_devices(devices)
+        devkey = (None if devs is None
+                  else tuple(getattr(d, "id", d) for d in devs))
+        ckey = (fp, tuple(sorted(targets)), cfg, devkey)
         self._compiles += 1
         hit = self._compiled.get(ckey)
         if hit is not None:
@@ -541,7 +634,12 @@ class Session:
             graphs = res.batches()
         model = HGNN(cfg, graph.feature_dims, graph.num_vertices,
                      sorted(targets))
-        compiled = CompiledHGNN(self, self.spec, model, res, graphs, fp)
+        plan = None
+        if devs is not None:
+            plan = self._shard_plan_for(fp, ckey[1], graphs, len(devs),
+                                        cfg.hidden)
+        compiled = CompiledHGNN(self, self.spec, model, res, graphs, fp,
+                                shard_plan=plan, devices=devs)
         self._memo_put(self._compiled, ckey, compiled)
         return compiled
 
@@ -593,8 +691,15 @@ class Session:
         cfg = compiled.cfg
         model = HGNN(cfg, new_graph.feature_dims, new_graph.num_vertices,
                      sorted(targets))
+        devs = compiled._devices
+        plan = None
+        if devs is not None:
+            # the delta moved edges, so the successor replans (cached by
+            # the new fingerprint) over the predecessor's device group
+            plan = self._shard_plan_for(fp_new, tkey, graphs, len(devs),
+                                        cfg.hidden)
         successor = CompiledHGNN(self, self.spec, model, res, graphs,
-                                 fp_new)
+                                 fp_new, shard_plan=plan, devices=devs)
         if compiled._forward_dep is not None:
             successor._forward_dep = compiled._forward_dep
             successor._dep_origin = compiled._dep_origin
@@ -607,7 +712,10 @@ class Session:
                              frozenset(dres.touched))
             successor._extractor = ext
         self._compiles += 1
-        self._memo_put(self._compiled, (fp_new, tkey, cfg), successor)
+        devkey = (None if devs is None
+                  else tuple(getattr(d, "id", d) for d in devs))
+        self._memo_put(self._compiled, (fp_new, tkey, cfg, devkey),
+                       successor)
         return successor, new_graph, dres
 
     # --------------------------------------------------------------- stats --
@@ -630,4 +738,31 @@ class Session:
             cache_evictions=cs.evictions,
             cache_entries=len(self.cache),
             cache_nbytes=self.cache.nbytes(),
+            shard=self._shard_stats(),
         )
+
+    def _shard_stats(self) -> Optional[Dict]:
+        """Aggregate device loads over every cached shard plan (None when
+        the spec is unsharded): per-device edge-block / edge / MAC counts
+        summed elementwise, plus the resulting max-over-mean ratio."""
+        if self.spec.shard == "none":
+            return None
+        plans = list(self._shard_plans.values())
+        ndev = max((p.num_devices for p in plans), default=0)
+        blocks = np.zeros(ndev, np.int64)
+        edges = np.zeros(ndev, np.int64)
+        macs = np.zeros(ndev, np.int64)
+        for p in plans:
+            blocks[: p.num_devices] += p.device_block_counts()
+            edges[: p.num_devices] += p.device_edge_counts()
+            macs[: p.num_devices] += p.device_mac_counts()
+        total = int(edges.sum())
+        lb = float(edges.max() / (total / ndev)) if total else 1.0
+        return {
+            "mode": self.spec.shard,
+            "plans": len(plans),
+            "per_device_edge_blocks": blocks.tolist(),
+            "per_device_edges": edges.tolist(),
+            "per_device_macs": macs.tolist(),
+            "load_balance": lb,
+        }

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.pipeline.frontend import PipelineConfig
 
@@ -33,6 +33,7 @@ _PLANNERS = ("naive", "ctt", "ctt_cache", "ctt_dp")
 _SGB_BACKENDS = ("host", "device")
 _NA_EXECUTORS = ("jnp", "banded")
 _KERNEL_BACKENDS = ("interpret", "pallas", "jnp")
+_SHARD_MODES = ("none", "relation", "edge_block")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +46,14 @@ class ExecutorSpec:
     ``pack=None`` means "whatever ``na_executor`` needs" and is resolved
     to a concrete bool at construction, so a constructed spec always
     states its packing policy.
+
+    ``shard`` selects multi-device execution of the banded forward
+    (``repro.distributed``): ``"relation"`` keeps each semantic graph's
+    block stream whole and spreads relations over devices, ``"edge_block"``
+    additionally splits oversized relations along dst-tile boundaries.
+    ``mesh_shape`` optionally fixes the device count (e.g. ``(4,)``);
+    ``None`` uses every device jax reports.  Both require the banded
+    executor — the jnp path has no packed streams to shard.
     """
 
     planner: str = "ctt"
@@ -55,6 +64,8 @@ class ExecutorSpec:
     degree_order: bool = True
     affinity: str = "barycenter"
     pack: Optional[bool] = None
+    shard: str = "none"
+    mesh_shape: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         for field, value, legal in (
@@ -62,6 +73,7 @@ class ExecutorSpec:
             ("sgb_backend", self.sgb_backend, _SGB_BACKENDS),
             ("na_executor", self.na_executor, _NA_EXECUTORS),
             ("kernel_backend", self.kernel_backend, _KERNEL_BACKENDS),
+            ("shard", self.shard, _SHARD_MODES),
         ):
             if value not in legal:
                 raise ValueError(
@@ -85,6 +97,22 @@ class ExecutorSpec:
             raise ValueError(
                 "pack=True requires restructure=True (PackedEdges blocks "
                 "are built from the restructured schedule)")
+        if self.shard != "none" and self.na_executor != "banded":
+            raise ValueError(
+                f"shard={self.shard!r} requires na_executor='banded': the "
+                "shard plan assigns the restructurer's packed edge-block "
+                "streams to devices (the jnp path has none)")
+        if self.mesh_shape is not None:
+            if self.shard == "none":
+                raise ValueError(
+                    "mesh_shape without sharding: set shard='relation' or "
+                    "'edge_block' (or drop mesh_shape)")
+            shape = tuple(int(s) for s in self.mesh_shape)
+            if not shape or any(s < 1 for s in shape):
+                raise ValueError(
+                    f"mesh_shape must be a non-empty tuple of positive "
+                    f"ints, got {self.mesh_shape!r}")
+            object.__setattr__(self, "mesh_shape", shape)
         if self.pack is None:
             object.__setattr__(self, "pack", self.na_executor == "banded")
 

@@ -1,9 +1,38 @@
-"""Distribution layer: sharding rules, collectives helpers."""
-from repro.distributed.sharding import (
-    data_pspec,
-    param_pspecs,
-    cache_pspecs,
-    shard_params,
+"""Multi-device HGNN execution: shard plans over packed edge-block streams.
+
+``repro.distributed`` is the HGNN sharding layer: :func:`build_shard_plan`
+assigns every semantic graph's edge blocks to mesh devices (relation- or
+edge-block-parallel) and :class:`ShardedHGNNExecutor` runs the banded
+forward under ``shard_map``.  Wire-up goes through
+``repro.api.ExecutorSpec(shard=..., mesh_shape=...)``.
+
+The LM-training partition specs that used to live here moved to
+``repro.train._lm_pspecs``; importing the old names raises with a pointer.
+"""
+from repro.distributed.hgnn import (
+    SHARD_MODES,
+    ShardedHGNNExecutor,
+    ShardPlan,
+    ShardSlice,
+    build_shard_plan,
 )
 
-__all__ = ["param_pspecs", "data_pspec", "cache_pspecs", "shard_params"]
+__all__ = [
+    "SHARD_MODES",
+    "ShardPlan",
+    "ShardSlice",
+    "ShardedHGNNExecutor",
+    "build_shard_plan",
+]
+
+_MOVED = ("param_pspecs", "data_pspec", "cache_pspecs", "shard_params")
+
+
+def __getattr__(name):
+    if name in _MOVED:
+        raise ImportError(
+            f"repro.distributed.{name} moved to repro.train._lm_pspecs: "
+            "repro.distributed now holds only the sharded HGNN executor "
+            "(ShardPlan / ShardedHGNNExecutor / build_shard_plan)."
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

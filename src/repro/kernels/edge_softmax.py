@@ -126,6 +126,26 @@ def edge_softmax_stats(
     return m, s
 
 
+def edge_softmax_stats_blocks(
+    dst_tile, first, logits_blocked, dst_local, valid, *,
+    num_dst_tiles: int, dst_tile_rows: int, interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Raw blocked-stream stats kernel entry over explicit block arrays.
+
+    The sibling of :func:`edge_softmax_stats` for callers that own the
+    block arrays instead of a ``PackedEdges`` — the sharded executor
+    (``repro.distributed.hgnn``) feeds per-device sub-streams (possibly
+    traced, inside ``shard_map``) whose tiles live in a concatenated
+    multi-relation space.  Returns tile-shaped ``(m, s)`` of
+    ``(num_dst_tiles, dst_tile_rows)`` each; rows of tiles never touched
+    by a ``first == 1`` block hold uninitialized memory, and padding
+    blocks must carry all-invalid slots so they leave their target tile's
+    stats at the (-1e30, 0) init.
+    """
+    return _stats_call(dst_tile, first, logits_blocked, dst_local, valid,
+                       num_dst_tiles, dst_tile_rows, interpret)
+
+
 def block_logits(packed: PackedEdges, edge_logits_in_order: np.ndarray) -> np.ndarray:
     """Scatter a flat (E,) logit array (in scheduled edge order) into the
     (nb, EB) blocked layout matching ``packed`` (padding gets -1e30).

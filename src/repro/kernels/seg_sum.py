@@ -240,6 +240,33 @@ def _first_touch_flags(dt: np.ndarray) -> np.ndarray:
     return ft
 
 
+def shard_blocked(packed: PackedEdges, block_ids: np.ndarray) -> dict:
+    """Host-side slice of a packing's block stream for one shard.
+
+    ``block_ids`` selects blocks (ascending, so the shard preserves the
+    schedule's within-tile accumulation order) and the result carries
+    everything the raw kernel entry (``seg_sum_blocks``) needs for that
+    sub-stream.  ``first`` is recomputed over the slice: a shard plan that
+    keeps every block of a dst tile on one device (the
+    ``repro.distributed.hgnn`` invariant) makes first-touch-in-shard
+    coincide with first-touch-ever, so the kernel's zero-init stays
+    correct per device without cross-device coordination.
+    """
+    ids = np.asarray(block_ids, np.int64)
+    assert ids.size == 0 or (np.diff(ids) > 0).all(), \
+        "block_ids must be strictly ascending (schedule order)"
+    dt = packed.dst_tile[ids]
+    return {
+        "band": packed.band[ids].astype(np.int32),
+        "dst_tile": dt.astype(np.int32),
+        "first": _first_touch_flags(dt),
+        "src_local": packed.src_local[ids],
+        "dst_local": packed.dst_local[ids],
+        "weight": packed.valid_weight()[ids],
+        "count": packed.count[ids].astype(np.int32),
+    }
+
+
 def pack_edge_blocks(
     src: np.ndarray,
     dst: np.ndarray,
@@ -636,3 +663,26 @@ def seg_sum_na(
         )
         out = jnp.where(mask[:, None], out, 0)
     return out[: packed.num_dst]
+
+
+def seg_sum_blocks(
+    band, dst_tile, first, src_local, dst_local, weight, h, *,
+    num_dst_tiles: int, src_band: int = SRC_BAND,
+    dst_tile_rows: int = DST_TILE, interpret: bool = True,
+) -> jax.Array:
+    """Raw blocked-stream NA kernel entry over explicit block arrays.
+
+    The sibling of :func:`seg_sum_na` for callers that own the block
+    arrays instead of a ``PackedEdges`` — the sharded executor
+    (``repro.distributed.hgnn``) slices per-device sub-streams out of a
+    cached packing (``shard_blocked``), offsets bands/tiles into a
+    concatenated multi-relation space, and feeds them here, possibly as
+    traced operands inside ``shard_map``.  ``h`` must cover
+    ``max(band) + 1`` bands of ``src_band`` rows; the output is
+    ``(num_dst_tiles * dst_tile_rows, D)`` with rows of never-touched
+    tiles holding uninitialized memory (callers mask, exactly like
+    ``seg_sum_na``'s epilogue).
+    """
+    return _seg_sum_call(band, dst_tile, first, src_local, dst_local,
+                         weight, h, num_dst_tiles, src_band, dst_tile_rows,
+                         interpret)

@@ -38,7 +38,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, cells, get_config
-from repro.distributed.sharding import cache_pspecs, data_pspec, param_pspecs
+from repro.train._lm_pspecs import cache_pspecs, data_pspec, param_pspecs
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import SHAPES, ArchConfig, ShapeSpec
 from repro.models.lm import LM

@@ -561,12 +561,19 @@ class HGNNServeEngine:
         seed: int = 0,
         features: Optional[Dict] = None,
         warm: bool = True,
+        device_group: Optional[Sequence] = None,
     ) -> TenantHandle:
         """Register a tenant: compile (cache-served through the shared
         session) and pin features + parameters.  ``warm=True`` runs one
         forward so serving latency is steady-state, never jit compile.
         Returns the tenant's :class:`TenantHandle` — the per-registration
         surface for ``submit``/``swap_params``/``swap_graph``/``stats``.
+
+        ``device_group`` (sharded sessions only — the engine's
+        ``ExecutorSpec.shard`` must not be ``"none"``) pins this tenant's
+        forwards to a subset of the mesh, given as jax Devices or indices
+        into ``jax.devices()``; tenants pinned to disjoint groups never
+        contend for a device.
 
         Example::
 
@@ -576,7 +583,7 @@ class HGNNServeEngine:
         with self._lock:
             if name in self._registered:
                 raise ValueError(f"graph {name!r} already registered")
-        compiled = self.session.compile(graph, targets, cfg)
+        compiled = self.session.compile(graph, targets, cfg, devices=device_group)
         feats = features if features is not None else device_features(graph)
         if params is None:
             params = compiled.init(seed)

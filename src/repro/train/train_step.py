@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import data_pspec, param_pspecs
+from repro.train._lm_pspecs import data_pspec, param_pspecs
 from repro.models.config import ArchConfig
 from repro.models.lm import LM
 from repro.train import compress as C
