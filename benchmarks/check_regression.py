@@ -21,7 +21,19 @@ the CI runner:
                   off-metapath cache-migration fast path,
                   ``frontend/incremental_touched_vs_rebuild`` for
                   on-metapath incremental recompose) — delta-path
-                  latency vs a cold rebuild of the same end graph.
+                  latency vs a cold rebuild of the same end graph;
+  serve_trace/v1  the traffic-trace replay (``benchmarks/serve_bench.py``
+                  over a committed ``serve_trace_config/v1`` workload):
+                  end-to-end p99 latency in ms (the one *absolute* gated
+                  metric — the batching window bounds it, and the wide
+                  CI tolerance absorbs runner-speed spread), plus
+                  ``goodput_loss`` (1 - goodput) and the unrecovered-
+                  request fraction, both with deterministic 0.0
+                  baselines — a single feasible request shed, failed, or
+                  unrecovered fails the job at any tolerance.  Points
+                  are matched on ``trace_id`` as well as scale, so a
+                  reshaped trace seeds a new baseline instead of gating
+                  against the old one.
 
 Scale adjustment: ratio metrics are only meaningful between points of
 the same ``scale`` (tiny graphs fit one source band, so e.g. the tile
@@ -89,6 +101,21 @@ def extract_metrics(point: Dict) -> Dict[str, float]:
         for k, r in point.get("shard", {}).items():
             if r is not None:
                 metrics[f"shard/{k}"] = r
+    elif schema.startswith("serve_trace/"):
+        # the traffic-trace replay: p99 end-to-end latency (absolute ms
+        # — the batching window bounds it; CI gates with a wide
+        # tolerance), goodput loss and the unrecovered fraction (both
+        # deterministic 0.0 baselines: the zero-baseline rule makes any
+        # feasible-request shed/failure a hard CI failure)
+        lat = point.get("latency_ms") or {}
+        if lat.get("p99") is not None:
+            metrics["serve_trace/p99_ms"] = lat["p99"]
+        goodput = point.get("goodput")
+        if goodput is not None:
+            metrics["serve_trace/goodput_loss"] = 1.0 - goodput
+        unrecovered = point.get("unrecovered_fraction")
+        if unrecovered is not None:
+            metrics["serve_trace/unrecovered"] = unrecovered
     else:
         raise ValueError(f"unknown bench schema {schema!r}")
     return metrics
@@ -100,12 +127,15 @@ def _match_key(point: Dict) -> tuple:
     Epochs and the dataset set matter for train points — the committed
     full trajectory (3 datasets, 60 epochs) and the CI smoke baseline
     (ACM only, 8 epochs) can share a scale, and comparing across them
-    would fail spuriously on missing datasets."""
+    would fail spuriously on missing datasets.  ``trace_id`` matters for
+    serve_trace points: p99 is only comparable between replays of the
+    *same* workload, so a reshaped trace seeds a fresh baseline."""
     return (
         point.get("schema"),
         point.get("scale"),
         point.get("model_scale", point.get("scale")),
         point.get("epochs"),
+        point.get("trace_id"),
         tuple(sorted(point.get("datasets", {}))),
     )
 
@@ -145,6 +175,7 @@ def compare(baseline: Dict, candidate: Dict, tolerance: float) -> List[str]:
 
 
 def main(argv: Optional[List[str]] = None) -> int:
+    """CLI entry point: exit 1 on any regression, 0 otherwise."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--candidate", required=True)
     ap.add_argument(

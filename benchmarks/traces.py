@@ -1,0 +1,289 @@
+"""Seeded traffic-trace generation for the serving benchmark harness.
+
+A *trace* is a list of timestamped events — inference requests with
+per-tenant node subsets and deadlines, scheduled ``swap_params`` /
+``swap_graph`` hot-swaps, and scheduled fault injections — that
+``benchmarks/serve_bench.py`` replays against a live
+``HGNNServeEngine``.  Everything is derived from ``TraceConfig.seed``
+through one ``random.Random`` stream, so the same config always yields
+the *identical* event list: CI can commit a tiny JSON config and replay
+the exact same workload on every push, and the latency/goodput point it
+produces is comparable against a committed baseline.
+
+Arrival processes:
+
+* ``"poisson"`` — exponential inter-arrivals at ``rate_rps``;
+* ``"bursty"`` — a square-wave modulated Poisson process: the first
+  half of every ``burst_period_s`` runs at ``rate_rps * burst_factor``
+  (the burst), the second half at ``rate_rps / burst_factor`` (the
+  lull).  Inter-arrivals are drawn per phase and redrawn at phase
+  boundaries (exact for a piecewise-constant rate, by memorylessness).
+
+Request events carry virtual timestamps in seconds from trace start;
+the replay driver maps them onto wall time (optionally compressed).
+Scheduled control events (``swap_params_times`` etc.) land at exactly
+the configured virtual times — they are committed schedule, not random
+draws — so tests can assert their placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+from typing import Dict, List, Optional, Tuple
+
+TRACE_CONFIG_SCHEMA = "serve_trace_config/v1"
+
+_ARRIVALS = ("poisson", "bursty")
+_FAULT_SITES = ("extract", "forward", "host_transfer")
+
+# deterministic tie-break when a control event shares a timestamp with a
+# request: control first, so a swap at t applies to requests from t on
+_KIND_ORDER = {"swap_params": 0, "swap_graph": 1, "fault": 2, "request": 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant in the workload mix.
+
+    ``weight`` is the tenant's share of request traffic (normalized over
+    the mix).  Each request names ``subset_min..subset_max`` distinct
+    target-vertex ids drawn from ``[0, num_nodes)`` — keep ``num_nodes``
+    well under the dataset's target count so the engine takes the subset
+    serving path.  ``deadline_ms`` is the per-request SLO stamped on
+    this tenant's requests (``None``: the engine policy's default).
+    ``offpath_relation`` names a relation outside every target metapath;
+    tenants that set it are eligible for scheduled ``swap_graph`` events
+    (the delta is an off-metapath insert — the cache-migration fast
+    path — so a mid-trace topology swap costs no recomposition).
+    """
+
+    name: str
+    dataset: str = "ACM"
+    targets: Tuple[str, ...] = ("APA", "PAP", "PSP")
+    target_type: str = "P"
+    model: str = "rgcn"
+    weight: float = 1.0
+    subset_min: int = 4
+    subset_max: int = 10
+    num_nodes: int = 16
+    deadline_ms: Optional[float] = None
+    offpath_relation: str = ""
+
+    def __post_init__(self):
+        """Validate the spec at construction (fail fast, like the API specs)."""
+        object.__setattr__(self, "targets", tuple(self.targets))
+        if not self.name:
+            raise ValueError("TenantSpec.name must be non-empty")
+        if not self.targets:
+            raise ValueError(f"tenant {self.name!r}: targets must be non-empty")
+        if self.weight <= 0:
+            raise ValueError(f"tenant {self.name!r}: weight must be > 0, got {self.weight}")
+        if not 1 <= self.subset_min <= self.subset_max <= self.num_nodes:
+            raise ValueError(
+                f"tenant {self.name!r}: need 1 <= subset_min <= subset_max <= num_nodes, "
+                f"got {self.subset_min}/{self.subset_max}/{self.num_nodes}"
+            )
+        if self.deadline_ms is not None and self.deadline_ms < 0:
+            raise ValueError(
+                f"tenant {self.name!r}: deadline_ms must be >= 0 (0 = expired at "
+                f"submit) or None, got {self.deadline_ms}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One timestamped replay event.
+
+    ``t`` is virtual seconds from trace start.  ``kind`` is
+    ``"request"`` (submit ``nodes`` for ``tenant`` with
+    ``deadline_ms``), ``"swap_params"`` / ``"swap_graph"`` (hot-swap the
+    named tenant), or ``"fault"`` (arm one transient fault at ``site``).
+    """
+
+    t: float
+    kind: str
+    tenant: str = ""
+    rid: int = -1
+    nodes: Tuple[int, ...] = ()
+    deadline_ms: Optional[float] = None
+    site: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """The seeded description of one workload trace.
+
+    ``generate_trace`` expands a config into its event list; equal
+    configs expand to identical traces.  ``expired_every`` marks every
+    N-th request (1-indexed) with ``deadline_ms=0.0`` — already expired
+    at submit, a *deterministic* shed the replay driver excludes from
+    the goodput denominator.  The ``*_times`` tuples schedule control
+    events at exact virtual times; ``swap_params`` events round-robin
+    over all tenants, ``swap_graph`` events over the tenants that
+    declare an ``offpath_relation``.
+    """
+
+    seed: int = 0
+    duration_s: float = 2.0
+    rate_rps: float = 40.0
+    arrival: str = "poisson"
+    burst_factor: float = 4.0
+    burst_period_s: float = 0.5
+    scale: float = 0.15
+    tenants: Tuple[TenantSpec, ...] = ()
+    expired_every: int = 0
+    swap_params_times: Tuple[float, ...] = ()
+    swap_graph_times: Tuple[float, ...] = ()
+    fault_times: Tuple[float, ...] = ()
+    fault_site: str = "forward"
+
+    def __post_init__(self):
+        """Coerce JSON-shaped members (lists, dicts) and validate."""
+        object.__setattr__(
+            self,
+            "tenants",
+            tuple(ts if isinstance(ts, TenantSpec) else TenantSpec(**ts) for ts in self.tenants),
+        )
+        for field in ("swap_params_times", "swap_graph_times", "fault_times"):
+            object.__setattr__(self, field, tuple(float(t) for t in getattr(self, field)))
+        if self.duration_s <= 0:
+            raise ValueError(f"duration_s must be > 0, got {self.duration_s}")
+        if self.rate_rps <= 0:
+            raise ValueError(f"rate_rps must be > 0, got {self.rate_rps}")
+        if self.arrival not in _ARRIVALS:
+            raise ValueError(f"arrival={self.arrival!r} not in {_ARRIVALS}")
+        if self.burst_factor < 1.0:
+            raise ValueError(f"burst_factor must be >= 1, got {self.burst_factor}")
+        if self.burst_period_s <= 0:
+            raise ValueError(f"burst_period_s must be > 0, got {self.burst_period_s}")
+        if self.expired_every < 0:
+            raise ValueError(f"expired_every must be >= 0, got {self.expired_every}")
+        if self.fault_site not in _FAULT_SITES:
+            raise ValueError(f"fault_site={self.fault_site!r} not in {_FAULT_SITES}")
+        names = [ts.name for ts in self.tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names in {names}")
+        for field in ("swap_params_times", "swap_graph_times", "fault_times"):
+            for t in getattr(self, field):
+                if not 0.0 <= t < self.duration_s:
+                    raise ValueError(
+                        f"{field}: scheduled time {t} outside [0, duration_s={self.duration_s})"
+                    )
+        if self.swap_graph_times and not any(ts.offpath_relation for ts in self.tenants):
+            raise ValueError(
+                "swap_graph_times scheduled but no tenant declares an "
+                "offpath_relation to build the delta from"
+            )
+
+    def to_dict(self) -> Dict:
+        """The JSON-shaped dict (round-trips through ``TraceConfig(**d)``)."""
+        return dataclasses.asdict(self)
+
+
+def rate_at(cfg: TraceConfig, t: float) -> float:
+    """The instantaneous arrival rate (requests/s) at virtual time ``t``.
+
+    Poisson traces are homogeneous; bursty traces run the first half of
+    each ``burst_period_s`` at ``rate_rps * burst_factor`` and the
+    second half at ``rate_rps / burst_factor``.
+    """
+    if cfg.arrival == "poisson":
+        return cfg.rate_rps
+    in_burst = (t % cfg.burst_period_s) < cfg.burst_period_s / 2.0
+    return cfg.rate_rps * cfg.burst_factor if in_burst else cfg.rate_rps / cfg.burst_factor
+
+
+def _next_phase_boundary(cfg: TraceConfig, t: float) -> float:
+    """The next instant the piecewise-constant rate changes after ``t``."""
+    if cfg.arrival == "poisson":
+        return float("inf")
+    half = cfg.burst_period_s / 2.0
+    return (t // half + 1.0) * half
+
+
+def _arrival_times(cfg: TraceConfig, rng: random.Random) -> List[float]:
+    """Arrival instants in ``[0, duration_s)`` for the configured process.
+
+    Inter-arrivals are exponential at the current phase's rate; a draw
+    that crosses a phase boundary is discarded and redrawn from the
+    boundary (exact thinning-free simulation of a piecewise-constant
+    intensity, by the exponential's memorylessness).
+    """
+    times: List[float] = []
+    t = 0.0
+    while True:
+        dt = rng.expovariate(rate_at(cfg, t))
+        boundary = _next_phase_boundary(cfg, t)
+        if t + dt > boundary:
+            t = boundary
+            continue
+        t += dt
+        if t >= cfg.duration_s:
+            return times
+        times.append(t)
+
+
+def generate_trace(cfg: TraceConfig) -> List[TraceEvent]:
+    """Expand a config into its deterministic, time-sorted event list.
+
+    Requests get sequential ``rid``s in arrival order; tenants are drawn
+    from the weighted mix and node subsets are sampled without
+    replacement from the tenant's id range.  Control events land at
+    exactly their scheduled times (ties sort control-before-request, so
+    a swap at ``t`` applies to requests arriving from ``t`` on).
+    """
+    if not cfg.tenants:
+        raise ValueError("TraceConfig.tenants is empty: nothing to generate")
+    rng = random.Random(cfg.seed)
+    by_name = {ts.name: ts for ts in cfg.tenants}
+    names = [ts.name for ts in cfg.tenants]
+    weights = [ts.weight for ts in cfg.tenants]
+    events: List[TraceEvent] = []
+    for rid, t in enumerate(_arrival_times(cfg, rng)):
+        spec = by_name[rng.choices(names, weights=weights)[0]]
+        k = rng.randint(spec.subset_min, spec.subset_max)
+        nodes = tuple(sorted(rng.sample(range(spec.num_nodes), k)))
+        deadline = spec.deadline_ms
+        if cfg.expired_every and (rid + 1) % cfg.expired_every == 0:
+            deadline = 0.0
+        events.append(
+            TraceEvent(
+                t=t,
+                kind="request",
+                tenant=spec.name,
+                rid=rid,
+                nodes=nodes,
+                deadline_ms=deadline,
+            )
+        )
+    for i, t in enumerate(cfg.swap_params_times):
+        events.append(TraceEvent(t=t, kind="swap_params", tenant=names[i % len(names)]))
+    swappable = [ts.name for ts in cfg.tenants if ts.offpath_relation]
+    for i, t in enumerate(cfg.swap_graph_times):
+        events.append(TraceEvent(t=t, kind="swap_graph", tenant=swappable[i % len(swappable)]))
+    for t in cfg.fault_times:
+        events.append(TraceEvent(t=t, kind="fault", site=cfg.fault_site))
+    events.sort(key=lambda e: (e.t, _KIND_ORDER[e.kind], e.rid))
+    return events
+
+
+def dump_config(cfg: TraceConfig, policy: Dict, path: str) -> None:
+    """Write a committed trace-config file: the workload plus the
+    ``ServePolicy`` kwargs the replay driver should serve it under.
+    """
+    doc = {"schema": TRACE_CONFIG_SCHEMA, "trace": cfg.to_dict(), "policy": dict(policy)}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def load_config(path: str) -> Tuple[TraceConfig, Dict]:
+    """Read a committed trace-config file back as ``(config, policy_kwargs)``."""
+    with open(path) as f:
+        doc = json.load(f)
+    schema = doc.get("schema", "")
+    if not schema.startswith("serve_trace_config/"):
+        raise ValueError(f"{path}: unknown trace-config schema {schema!r}")
+    return TraceConfig(**doc["trace"]), dict(doc.get("policy", {}))

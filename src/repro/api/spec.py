@@ -216,6 +216,17 @@ class ServePolicy:
     head-only subset forward for that step (no host-side closure
     extraction) — the engine degrades before it sheds.
 
+    ``batch_window_ms`` / ``batch_max_size`` — the batching window: with
+    a positive window the serve loop holds the queue open for up to
+    ``batch_window_ms`` after the *oldest* queued request was admitted,
+    so bursts coalesce into one compiled forward per fingerprint group
+    instead of one per wake-up.  The window closes early when the queue
+    reaches ``batch_max_size`` requests (``None`` — no size cap) or when
+    the earliest queued deadline would expire before the window ends —
+    a request is *never* held past its ``deadline_ms``.  ``0.0`` (the
+    default) keeps the pre-window behavior: the loop drains whatever is
+    queued the moment it wakes.
+
     Example::
 
         engine = HGNNServeEngine(
@@ -240,6 +251,8 @@ class ServePolicy:
     breaker_threshold: int = 5
     breaker_cooldown_ms: float = 500.0
     degrade_pressure: float = 0.8
+    batch_window_ms: float = 0.0
+    batch_max_size: Optional[int] = None
 
     def __post_init__(self):
         """Validate every knob at construction (fail fast, like the spec)."""
@@ -299,6 +312,21 @@ class ServePolicy:
             raise ValueError(
                 f"degrade_pressure must be in (0, 1], got "
                 f"{self.degrade_pressure}")
+        if self.batch_window_ms < 0:
+            raise ValueError(
+                f"batch_window_ms must be >= 0 (0 disables the batching "
+                f"window), got {self.batch_window_ms}")
+        if self.batch_max_size is not None:
+            if self.batch_max_size < 1:
+                raise ValueError(
+                    f"batch_max_size must be >= 1 (or None for no size "
+                    f"cap), got {self.batch_max_size}")
+            if self.batch_window_ms <= 0:
+                raise ValueError(
+                    "batch_max_size without a batching window: set "
+                    "batch_window_ms > 0 (the size cap closes an open "
+                    "window early; with no window there is nothing to "
+                    "close)")
 
     @property
     def effective_burst(self) -> int:

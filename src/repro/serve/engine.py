@@ -11,6 +11,7 @@ land in adjacent slots, so their KV blocks sit in adjacent cache rows (the
 Graph Restructurer's community-locality idea applied to the request x
 KV-block bipartite graph).
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -53,8 +54,9 @@ class ServeEngine:
         done = eng.run(requests)      # {rid: [generated token ids]}
     """
 
-    def __init__(self, model: LM, params, batch_slots: int, max_len: int,
-                 group_prefixes: bool = True):
+    def __init__(
+        self, model: LM, params, batch_slots: int, max_len: int, group_prefixes: bool = True
+    ):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -64,8 +66,8 @@ class ServeEngine:
         self.pos = np.zeros(batch_slots, np.int32)
         self.live: List[Optional[Request]] = [None] * batch_slots
         self._decode = jax.jit(
-            lambda p, tok, cache, cpos: model.forward(
-                p, tokens=tok, cache=cache, cache_pos=cpos))
+            lambda p, tok, cache, cpos: model.forward(p, tokens=tok, cache=cache, cache_pos=cpos)
+        )
 
     # ----------------------------------------------------------- admission -
     def admit(self, requests: List[Request]) -> List[Request]:
@@ -90,8 +92,7 @@ class ServeEngine:
         # flash-attention path exercised by prefill_* shapes).
         for i, t in enumerate(r.prompt.tolist()):
             tok = jnp.full((self.slots, 1), 0, jnp.int32).at[slot, 0].set(t)
-            logits, self.cache, _ = self._decode(
-                self.params, tok, self.cache, jnp.int32(i))
+            logits, self.cache, _ = self._decode(self.params, tok, self.cache, jnp.int32(i))
         self.pos[slot] = len(r.prompt)
 
     # -------------------------------------------------------------- decode -
@@ -105,7 +106,8 @@ class ServeEngine:
                 toks[s, 0] = int(r.prompt[-1])
         cpos = int(self.pos.max()) if self.pos.max() else 0
         logits, self.cache, _ = self._decode(
-            self.params, jnp.asarray(toks), self.cache, jnp.int32(cpos))
+            self.params, jnp.asarray(toks), self.cache, jnp.int32(cpos)
+        )
         out = {}
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for s, r in enumerate(self.live):
@@ -130,8 +132,10 @@ class ServeEngine:
             queue = [r for r in queue if r not in admitted]
             self.step()
             for r in list(requests):
-                if r.out is not None and r not in queue and all(
-                    self.live[s] is not r for s in range(self.slots)
+                if (
+                    r.out is not None
+                    and r not in queue
+                    and all(self.live[s] is not r for s in range(self.slots))
                 ):
                     done[r.rid] = r.out
             steps += 1

@@ -31,7 +31,13 @@ Serving has three layers:
   Same-topology tenants run back-to-back so the session's cached frontend
   products stay hot.
 * **The loop** — ``run()`` drives ``step()`` from a background thread so
-  submitters never block on compute; ``stop()`` drains and joins.
+  submitters never block on compute; ``stop()`` drains and joins.  With
+  a positive ``ServePolicy.batch_window_ms`` the loop holds the queue
+  open for up to the window after the oldest admission — re-arming its
+  timed wait on every submit notification — so bursts coalesce into
+  fewer, fuller compiled forwards; the window closes early when the
+  queue reaches ``batch_max_size`` or when the earliest queued deadline
+  would expire mid-window (a request is never held past its SLO).
   ``swap_params()`` atomically installs freshly trained parameters into a
   live registration, bumping a version stamped on every response;
   ``swap_graph()`` does the same for the *topology* — a ``GraphDelta``
@@ -235,6 +241,10 @@ class _TenantStats:
     failures: int = 0
     retries: int = 0
     breaker_fastfails: int = 0
+    batches: int = 0  # successful compiled forwards that served this tenant
+    batch_requests: int = 0  # requests those forwards carried (mean = /batches)
+    window_timeouts: int = 0  # drains whose batching window ran to its full length
+    early_closes: int = 0  # drains closed early: size cap or approaching deadline
 
 
 @dataclasses.dataclass
@@ -486,6 +496,12 @@ def _tenant_stats_dict(reg: _Registration) -> Dict:
         "failures": reg.tstats.failures,
         "retries": reg.tstats.retries,
         "breaker_fastfails": reg.tstats.breaker_fastfails,
+        "batches": reg.tstats.batches,
+        "mean_batch_size": (
+            reg.tstats.batch_requests / reg.tstats.batches if reg.tstats.batches else 0.0
+        ),
+        "window_timeouts": reg.tstats.window_timeouts,
+        "early_closes": reg.tstats.early_closes,
         "breaker": reg.breaker.state,
         "version": reg.version,
         "fingerprint": reg.fingerprint,
@@ -543,6 +559,8 @@ class HGNNServeEngine:
         self._retries = 0
         self._breaker_fastfails = 0
         self._degraded_steps = 0
+        self._window_timeouts = 0
+        self._early_closes = 0
         # bounded: a long-lived engine must not grow a per-request list
         # forever; percentiles come from the most recent window
         self._latencies_us: "collections.deque[float]" = collections.deque(maxlen=4096)
@@ -974,6 +992,8 @@ class HGNNServeEngine:
                 self._compute_us.append(r.compute_us)
             self._served += len(group)
             reg.tstats.served += len(group)
+            reg.tstats.batches += 1
+            reg.tstats.batch_requests += len(group)
         return responses
 
     def _serve_with_recovery(self, name: str, group: List[_Pending], degraded: bool):
@@ -1077,7 +1097,7 @@ class HGNNServeEngine:
                 _deliver(p.future, result=resp)
             return responses, None
 
-    def step(self) -> List[HGNNResponse]:
+    def step(self, window_close: Optional[str] = None) -> List[HGNNResponse]:
         """Drain the queue: one compiled forward per registration serves
         all its queued requests; registrations sharing a topology
         fingerprint run adjacently (their frontend products are the same
@@ -1098,6 +1118,13 @@ class HGNNServeEngine:
         ``"dependency"``, this step serves eligible groups through the
         cheaper head-only subset forward instead — degrade before shed.
 
+        ``window_close`` records *why* the batching window released this
+        drain (the serving loop passes ``"timeout"``, ``"size"``, or
+        ``"deadline"``; direct callers leave it ``None``) and is
+        attributed to every tenant with requests in the drain — the
+        ``window_timeouts``/``early_closes`` counters in
+        ``stats()["tenants"]``.
+
         Example::
 
             engine.submit([...]); responses = engine.step()
@@ -1114,6 +1141,18 @@ class HGNNServeEngine:
             )
             if degraded:
                 self._degraded_steps += 1
+            if window_close in ("timeout", "size", "deadline"):
+                timed_out = window_close == "timeout"
+                if timed_out:
+                    self._window_timeouts += 1
+                else:
+                    self._early_closes += 1
+                for name in {p.req.graph for p in queue}:
+                    tstats = self._registered[name].tstats
+                    if timed_out:
+                        tstats.window_timeouts += 1
+                    else:
+                        tstats.early_closes += 1
         # fingerprint-major grouping; stable, so per-tenant FIFO holds
         order = sorted(
             range(len(queue)),
@@ -1158,19 +1197,62 @@ class HGNNServeEngine:
             thread = self._thread
         thread.start()
 
+    def _hold_window_locked(self, window_s: float) -> str:
+        """Hold the batching window open; the caller (the serving loop)
+        holds the lock.  Returns why the window released:
+
+        * ``"size"`` — the queue reached ``ServePolicy.batch_max_size``;
+        * ``"deadline"`` — the earliest queued deadline would expire
+          before the window ends: serve or shed *now*, a request is
+          never held past its SLO;
+        * ``"timeout"`` — the window ran its full length;
+        * ``"stop"`` — ``stop()`` flipped the flag mid-window (drain
+          immediately, no window accounting).
+
+        The window is anchored at the *oldest* queued admission, so a
+        request's queueing delay is bounded by one window regardless of
+        later arrivals.  ``submit`` notifies ``_work_ready`` on every
+        enqueue; a wake-up re-checks size/deadline and re-arms the timed
+        wait with the *remaining* window — it must not close the window
+        just because the condition fired."""
+        max_size = self.policy.batch_max_size
+        while True:
+            if not self._running:
+                return "stop"
+            if not self._queue:
+                # a concurrent direct step() drained the queue mid-window
+                return "timeout"
+            if max_size is not None and len(self._queue) >= max_size:
+                return "size"
+            close_at = min(p.t_admit for p in self._queue) + window_s
+            deadlines = [p.deadline for p in self._queue if p.deadline is not None]
+            if deadlines and min(deadlines) < close_at:
+                return "deadline"
+            remaining = close_at - time.perf_counter()
+            if remaining <= 0:
+                return "timeout"
+            self._work_ready.wait(timeout=remaining)
+
     def _loop(self) -> None:
         """Background serving loop: wait for work, drain it, repeat;
         drains whatever is still queued when ``stop()`` flips the flag.
-        The wait is untimed — ``submit`` and ``stop`` notify
-        ``_work_ready`` on every state change, so the loop never polls."""
+        With ``ServePolicy.batch_window_ms == 0`` the wait is untimed —
+        ``submit`` and ``stop`` notify ``_work_ready`` on every state
+        change, so the loop never polls.  A positive window inserts
+        ``_hold_window_locked`` between first-work and drain: the queue
+        stays open up to the window so bursts coalesce, and the close
+        reason is threaded into ``step(window_close=...)`` for the
+        batching counters."""
+        window_s = self.policy.batch_window_ms / 1e3
         while True:
             with self._lock:
                 while self._running and not self._queue:
                     self._work_ready.wait()
                 if not self._running and not self._queue:
                     return
+                close = self._hold_window_locked(window_s) if window_s > 0 else None
             try:
-                self.step()
+                self.step(window_close=close if close != "stop" else None)
             except Exception:
                 # the group's futures already carry the exception; the
                 # loop keeps serving the remaining tenants
@@ -1220,9 +1302,12 @@ class HGNNServeEngine:
         """One serving snapshot: request/forward counts split by mode,
         batching factor, latency percentiles with the queueing-vs-compute
         split, fault-tolerance counters (deadline/quota sheds, retries,
-        breaker fast-fails, degraded steps), a per-tenant breakdown
-        (``"tenants"``: submitted/served/rejected splits plus the
-        breaker state), and the shared session's cache stats.
+        breaker fast-fails, degraded steps), batching-window counters
+        (``window_timeouts``/``early_closes``), a per-tenant breakdown
+        (``"tenants"``: submitted/served/rejected splits, per-tenant
+        batching — ``batches``/``mean_batch_size`` and the window
+        counters — plus the breaker state), and the shared session's
+        cache stats.
 
         Example::
 
@@ -1244,6 +1329,8 @@ class HGNNServeEngine:
                 "retries": self._retries,
                 "breaker_fastfails": self._breaker_fastfails,
                 "degraded_steps": self._degraded_steps,
+                "window_timeouts": self._window_timeouts,
+                "early_closes": self._early_closes,
                 "queued": len(self._queue),
                 "running": self._running,
                 "forwards": forwards,
@@ -1253,6 +1340,7 @@ class HGNNServeEngine:
                 "batching_factor": self._served / max(1, forwards),
                 "latency_us_p50": _pct(self._latencies_us, 50),
                 "latency_us_p95": _pct(self._latencies_us, 95),
+                "latency_us_p99": _pct(self._latencies_us, 99),
                 "queue_us_p50": _pct(self._queue_us, 50),
                 "compute_us_p50": _pct(self._compute_us, 50),
                 "tenants": {

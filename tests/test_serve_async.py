@@ -465,3 +465,105 @@ def test_swap_graph_rejects_stale_base_topology(served):
     # the handle's registration now holds the mutated graph; a second
     # swap against it succeeds (deltas chain), and the version advances
     assert acm.swap_graph(_tp_delta(served["graph"], seed=2)) == 3
+
+
+# ------------------------------------------------------ batching window --
+def test_policy_batch_window_validation():
+    with pytest.raises(ValueError, match="batch_window_ms"):
+        ServePolicy(batch_window_ms=-1.0)
+    with pytest.raises(ValueError, match="batch_max_size"):
+        ServePolicy(batch_window_ms=10.0, batch_max_size=0)
+    with pytest.raises(ValueError, match="batch_max_size without"):
+        ServePolicy(batch_max_size=4)  # size cap needs an open window
+    p = ServePolicy(batch_window_ms=25.0, batch_max_size=8)
+    assert p.batch_window_ms == 25.0 and p.batch_max_size == 8
+
+
+def test_window_deadline_slack_never_held_full_window(served):
+    """The deadline/window interaction: a request admitted with ~1 ms of
+    slack is served or shed immediately ("deadline" close), never held
+    for the full batching window."""
+    eng = _engine(served, ServePolicy(batch_window_ms=2000.0))
+    eng.run()
+    try:
+        t0 = time.perf_counter()
+        fut = eng.submit(HGNNRequest(0, "acm", nodes=np.array([1, 2]),
+                                     deadline_ms=1.0))
+        try:
+            fut.result(timeout=10)
+        except Exception:
+            pass  # shed (DeadlineExceeded) and served are both legal
+        elapsed = time.perf_counter() - t0
+        # well under the 2 s window: the loop closed on the approaching
+        # deadline instead of holding the request
+        assert elapsed < 1.0, f"held {elapsed:.3f}s against a 1 ms deadline"
+        assert fut.done()
+        stats = eng.stats()
+        assert stats["early_closes"] >= 1
+        assert stats["tenants"]["acm"]["early_closes"] >= 1
+    finally:
+        eng.stop()
+
+
+def test_window_rearm_batches_concurrent_submits(served):
+    """A submit mid-window wakes the loop's timed wait; the loop must
+    re-arm with the remaining window (not serve immediately), so both
+    requests ride one compiled forward and the drain closes by
+    timeout."""
+    eng = _engine(served, ServePolicy(batch_window_ms=600.0))
+    eng.run()
+    try:
+        f0 = eng.submit(HGNNRequest(0, "acm", nodes=np.array([1, 2, 3])))
+        time.sleep(0.15)  # well inside the window: the loop is waiting
+        f1 = eng.submit(HGNNRequest(1, "acm", nodes=np.array([4, 5])))
+        r0, r1 = f0.result(timeout=30), f1.result(timeout=30)
+        assert r0.batched_with == 2 and r1.batched_with == 2
+        t = eng.stats()["tenants"]["acm"]
+        assert t["batches"] == 1 and t["mean_batch_size"] == 2.0
+        assert t["window_timeouts"] == 1 and t["early_closes"] == 0
+    finally:
+        eng.stop()
+
+
+def test_window_closes_early_on_size(served):
+    """batch_max_size closes an open window the moment the queue
+    reaches it — the futures resolve long before the (huge) window."""
+    eng = _engine(served, ServePolicy(batch_window_ms=60_000.0,
+                                      batch_max_size=2))
+    eng.run()
+    try:
+        t0 = time.perf_counter()
+        futs = eng.submit([HGNNRequest(0, "acm", nodes=np.array([1])),
+                           HGNNRequest(1, "acm", nodes=np.array([2, 3]))])
+        responses = [f.result(timeout=30) for f in futs]
+        assert time.perf_counter() - t0 < 30.0  # not the 60 s window
+        assert all(r.batched_with == 2 for r in responses)
+        t = eng.stats()["tenants"]["acm"]
+        assert t["early_closes"] == 1 and t["window_timeouts"] == 0
+    finally:
+        eng.stop()
+
+
+def test_tenant_batching_stats_hand_computed(served):
+    """stats()["tenants"] batching fields against a hand-computed trace:
+    three direct drains of sizes 3/2/1 -> batches=3, mean_batch_size=2;
+    window attribution only counts loop-window closes."""
+    eng = _engine(served, ServePolicy())
+    for rids in ((0, 1, 2), (3, 4), (5,)):
+        eng.submit([HGNNRequest(i, "acm", nodes=np.array([i + 1]))
+                    for i in rids])
+        eng.step()
+    t = eng.stats()["tenants"]["acm"]
+    assert t["batches"] == 3
+    assert t["mean_batch_size"] == pytest.approx(2.0)
+    assert t["window_timeouts"] == 0 and t["early_closes"] == 0
+    # explicit close-reason attribution (what the loop passes through)
+    eng.submit(HGNNRequest(6, "acm", nodes=np.array([7])))
+    eng.step(window_close="timeout")
+    eng.submit(HGNNRequest(7, "acm", nodes=np.array([8])))
+    eng.step(window_close="size")
+    t = eng.stats()["tenants"]["acm"]
+    assert t["batches"] == 5 and t["mean_batch_size"] == pytest.approx(8 / 5)
+    assert t["window_timeouts"] == 1 and t["early_closes"] == 1
+    s = eng.stats()
+    assert s["window_timeouts"] == 1 and s["early_closes"] == 1

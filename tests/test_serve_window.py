@@ -1,0 +1,111 @@
+"""Window-batched serving is bitwise-equal to per-request serving.
+
+The batching window changes *when* the loop drains and how requests
+group into compiled forwards — it must never change *what* a request
+gets back.  The seeded property: the same request stream served through
+(a) a window engine (one forward per drain, groups coalesced) and
+(b) a ``batch_window_ms=0`` engine stepped once per request resolves
+every future to bitwise-identical logits/predictions per rid, with the
+same monotone parameter-version sequence across a mid-stream
+``swap_params`` — across rgcn/rgat/shgn on both NA executors.
+"""
+import numpy as np
+import pytest
+
+from proptest import seeded_property
+from repro.api import ExecutorSpec, ServePolicy, Session
+from repro.core.hgnn import HGNNConfig
+from repro.pipeline import SemanticGraphCache
+from repro.serve import HGNNRequest, HGNNServeEngine
+
+TARGETS = ["APA", "PAP", "PSP"]
+MODELS = ("rgcn", "rgat", "shgn")
+ROUNDS = 2
+ROUND_SIZE = 3
+
+
+def _cfg(model):
+    return HGNNConfig(model=model, hidden=16, num_layers=2, num_classes=3,
+                      target_type="P")
+
+
+@pytest.fixture(scope="module")
+def sessions(acm_small):
+    """One jnp and one banded session over a shared semantic-graph cache
+    (compiled models are session-cached, so both engines of a case share
+    one compiled object per executor/model)."""
+    cache = SemanticGraphCache()
+    return {
+        "jnp": Session(ExecutorSpec(na_executor="jnp"), cache=cache),
+        "banded": Session(ExecutorSpec(na_executor="banded"), cache=cache),
+        "graph": acm_small,
+    }
+
+
+def _rounds(rng, num_target):
+    """ROUNDS batches of ROUND_SIZE requests with seeded node subsets."""
+    rounds, rid = [], 0
+    for _ in range(ROUNDS):
+        batch = []
+        for _ in range(ROUND_SIZE):
+            k = int(rng.integers(2, 7))
+            ids = np.unique(rng.integers(0, min(16, num_target), size=k))
+            batch.append((rid, ids))
+            rid += 1
+        rounds.append(batch)
+    return rounds
+
+
+@pytest.mark.parametrize("executor", ["jnp", "banded"])
+@pytest.mark.parametrize("model", MODELS)
+@seeded_property(max_examples=6, seeds=(0, 7, 42))
+def test_window_parity_bitwise(sessions, executor, model, seed):
+    sess, graph = sessions[executor], sessions["graph"]
+    compiled = sess.compile(graph, TARGETS, _cfg(model))
+    params = [compiled.init(seed), compiled.init(seed + 1)]
+    rng = np.random.default_rng(seed)
+    rounds = _rounds(rng, compiled.num_target)
+
+    # (a) the window engine: background loop, size-capped window — each
+    # submitted round coalesces into one drain
+    win = HGNNServeEngine(
+        session=sess,
+        policy=ServePolicy(batch_window_ms=250.0, batch_max_size=ROUND_SIZE))
+    win_h = win.register("acm", graph, TARGETS, _cfg(model),
+                         params=params[0], warm=False)
+    # (b) the reference engine: no window, one direct step per request
+    ref = HGNNServeEngine(session=sess, policy=ServePolicy())
+    ref_h = ref.register("acm", graph, TARGETS, _cfg(model),
+                         params=params[0], warm=False)
+
+    win.run()
+    try:
+        win_resp, ref_resp = {}, {}
+        for rnd, batch in enumerate(rounds):
+            futs = win.submit([HGNNRequest(rid, "acm", nodes=ids)
+                               for rid, ids in batch])
+            for f in futs:
+                r = f.result(timeout=120)
+                win_resp[r.rid] = r
+            for rid, ids in batch:
+                fut = ref.submit(HGNNRequest(rid, "acm", nodes=ids))
+                ref.step()
+                r = fut.result(timeout=120)
+                assert r.batched_with == 1  # truly per-request
+                ref_resp[r.rid] = r
+            if rnd + 1 < ROUNDS:  # mid-stream hot swap on both engines
+                assert win_h.swap_params(params[rnd + 1]) == rnd + 2
+                assert ref_h.swap_params(params[rnd + 1]) == rnd + 2
+    finally:
+        win.stop()
+
+    assert sorted(win_resp) == sorted(ref_resp)
+    win_versions = [win_resp[rid].params_version for rid in sorted(win_resp)]
+    ref_versions = [ref_resp[rid].params_version for rid in sorted(ref_resp)]
+    assert win_versions == ref_versions == sorted(win_versions)
+    assert win_versions == [1] * ROUND_SIZE + [2] * (len(win_versions) - ROUND_SIZE)
+    for rid in sorted(win_resp):
+        a, b = win_resp[rid], ref_resp[rid]
+        np.testing.assert_array_equal(a.logits, b.logits)  # bitwise
+        np.testing.assert_array_equal(a.predictions, b.predictions)
+        assert a.mode == b.mode == "subset"

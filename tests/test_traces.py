@@ -1,0 +1,202 @@
+"""The traffic-trace harness: seeded generator determinism, arrival and
+tenant-mix statistics, scheduled-event placement, config round-trips,
+and the serve_trace/v1 branch of the regression gate (synthetic 2x p99
+fires it; the zero-baseline goodput/unrecovered rule holds)."""
+import copy
+import dataclasses
+import json
+from collections import Counter
+
+import pytest
+
+from benchmarks.check_regression import (compare, extract_metrics, main,
+                                         pick_baseline)
+from benchmarks.traces import (TenantSpec, TraceConfig, dump_config,
+                               generate_trace, load_config, rate_at)
+
+TENANTS = (
+    TenantSpec(name="a", weight=3.0, subset_min=2, subset_max=6,
+               num_nodes=16, deadline_ms=500.0, offpath_relation="TP"),
+    TenantSpec(name="b", weight=1.0, subset_min=4, subset_max=8,
+               num_nodes=12),
+)
+
+
+def _cfg(**kw):
+    kw.setdefault("seed", 0)
+    kw.setdefault("duration_s", 4.0)
+    kw.setdefault("rate_rps", 100.0)
+    kw.setdefault("tenants", TENANTS)
+    return TraceConfig(**kw)
+
+
+# ------------------------------------------------------------ generator --
+def test_same_seed_same_trace_different_seed_differs():
+    cfg = _cfg(swap_params_times=(1.0,), fault_times=(2.0,))
+    assert generate_trace(cfg) == generate_trace(cfg)
+    other = dataclasses.replace(cfg, seed=1)
+    assert generate_trace(other) != generate_trace(cfg)
+
+
+def test_trace_roundtrips_through_json():
+    cfg = _cfg(arrival="bursty", swap_graph_times=(0.5,), expired_every=10)
+    doc = json.loads(json.dumps(cfg.to_dict()))  # real JSON round trip
+    assert TraceConfig(**doc) == cfg
+    assert generate_trace(TraceConfig(**doc)) == generate_trace(cfg)
+
+
+def test_requests_sorted_sequential_and_in_range():
+    cfg = _cfg(expired_every=10)
+    events = generate_trace(cfg)
+    reqs = [e for e in events if e.kind == "request"]
+    assert [e.rid for e in reqs] == list(range(len(reqs)))
+    assert all(0.0 <= e.t < cfg.duration_s for e in events)
+    assert [e.t for e in events] == sorted(e.t for e in events)
+    by_name = {ts.name: ts for ts in cfg.tenants}
+    for e in reqs:
+        spec = by_name[e.tenant]
+        assert spec.subset_min <= len(e.nodes) <= spec.subset_max
+        assert len(set(e.nodes)) == len(e.nodes)  # distinct ids
+        assert all(0 <= n < spec.num_nodes for n in e.nodes)
+    # every expired_every-th request is scheduled-expired (deadline 0)
+    for e in reqs:
+        if (e.rid + 1) % cfg.expired_every == 0:
+            assert e.deadline_ms == 0.0
+        else:
+            assert e.deadline_ms == by_name[e.tenant].deadline_ms
+
+
+def test_poisson_rate_and_tenant_mix_within_tolerance():
+    cfg = _cfg(duration_s=8.0)  # E[n] = 800, sd ~ 28
+    reqs = [e for e in generate_trace(cfg) if e.kind == "request"]
+    assert len(reqs) == pytest.approx(800, rel=0.15)
+    mix = Counter(e.tenant for e in reqs)
+    assert mix["a"] / len(reqs) == pytest.approx(0.75, abs=0.08)
+    assert mix["b"] / len(reqs) == pytest.approx(0.25, abs=0.08)
+
+
+def test_bursty_phases_modulate_the_rate():
+    cfg = _cfg(arrival="bursty", duration_s=8.0, burst_factor=4.0,
+               burst_period_s=1.0)
+    assert rate_at(cfg, 0.1) == pytest.approx(400.0)  # burst half
+    assert rate_at(cfg, 0.9) == pytest.approx(25.0)  # lull half
+    reqs = [e for e in generate_trace(cfg) if e.kind == "request"]
+    on = sum(1 for e in reqs if (e.t % 1.0) < 0.5)
+    off = len(reqs) - on
+    # E[on] = 1600, E[off] = 100: the split must be unmistakable
+    assert on > 8 * max(1, off)
+
+
+def test_scheduled_events_land_at_exact_virtual_times():
+    cfg = _cfg(swap_params_times=(0.25, 1.5), swap_graph_times=(2.0,),
+               fault_times=(0.75,), fault_site="host_transfer")
+    events = generate_trace(cfg)
+    swaps = [e for e in events if e.kind == "swap_params"]
+    assert [e.t for e in swaps] == [0.25, 1.5]
+    assert [e.tenant for e in swaps] == ["a", "b"]  # round-robin
+    graphs = [e for e in events if e.kind == "swap_graph"]
+    assert [(e.t, e.tenant) for e in graphs] == [(2.0, "a")]  # offpath only
+    faults = [e for e in events if e.kind == "fault"]
+    assert [(e.t, e.site) for e in faults] == [(0.75, "host_transfer")]
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        _cfg(arrival="steady")
+    with pytest.raises(ValueError, match="rate_rps"):
+        _cfg(rate_rps=0.0)
+    with pytest.raises(ValueError, match="outside"):
+        _cfg(fault_times=(99.0,))
+    with pytest.raises(ValueError, match="offpath_relation"):
+        _cfg(tenants=(TENANTS[1],), swap_graph_times=(1.0,))
+    with pytest.raises(ValueError, match="duplicate"):
+        _cfg(tenants=(TENANTS[0], TENANTS[0]))
+    with pytest.raises(ValueError, match="subset_min"):
+        TenantSpec(name="x", subset_min=9, subset_max=4)
+    with pytest.raises(ValueError, match="empty"):
+        generate_trace(_cfg(tenants=()))
+
+
+def test_config_file_roundtrip(tmp_path):
+    cfg = _cfg(expired_every=20)
+    policy = {"batch_window_ms": 20.0, "batch_max_size": 16}
+    path = str(tmp_path / "trace.json")
+    dump_config(cfg, policy, path)
+    cfg2, policy2 = load_config(path)
+    assert cfg2 == cfg and policy2 == policy
+    (tmp_path / "bad.json").write_text(json.dumps({"schema": "nope/v1"}))
+    with pytest.raises(ValueError, match="schema"):
+        load_config(str(tmp_path / "bad.json"))
+
+
+# ------------------------------------------- serve_trace/v1 gate branch --
+SERVE_POINT = {
+    "schema": "serve_trace/v1",
+    "scale": 0.15,
+    "trace_id": "seed42-poisson-24rps-2.5s-3t",
+    "latency_ms": {"p50": 47.0, "p95": 72.0, "p99": 78.0, "mean": 45.0},
+    "goodput": 1.0,
+    "unrecovered_fraction": 0.0,
+}
+
+
+def test_extract_metrics_serve_trace():
+    m = extract_metrics(SERVE_POINT)
+    assert m == {
+        "serve_trace/p99_ms": pytest.approx(78.0),
+        "serve_trace/goodput_loss": 0.0,
+        "serve_trace/unrecovered": 0.0,
+    }
+
+
+def test_gate_fires_on_2x_p99():
+    worse = copy.deepcopy(SERVE_POINT)
+    worse["latency_ms"]["p99"] *= 2
+    failures = compare(SERVE_POINT, worse, tolerance=0.75)
+    assert len(failures) == 1 and "serve_trace/p99_ms" in failures[0]
+    assert compare(SERVE_POINT, SERVE_POINT, tolerance=0.75) == []
+
+
+def test_goodput_and_unrecovered_zero_baselines_admit_no_regression():
+    """goodput_loss and unrecovered have deterministic 0.0 baselines: a
+    single feasible request shed or failed regresses at ANY tolerance."""
+    shed = copy.deepcopy(SERVE_POINT)
+    shed["goodput"] = 62 / 63
+    failures = compare(SERVE_POINT, shed, tolerance=100.0)
+    assert len(failures) == 1 and "goodput_loss" in failures[0]
+    assert "admits no regression" in failures[0]
+    broken = copy.deepcopy(SERVE_POINT)
+    broken["unrecovered_fraction"] = 1 / 63
+    failures = compare(SERVE_POINT, broken, tolerance=100.0)
+    assert len(failures) == 1 and "serve_trace/unrecovered" in failures[0]
+
+
+def test_serve_trace_baseline_matching_includes_trace_id():
+    other = copy.deepcopy(SERVE_POINT)
+    other["trace_id"] = "seed7-bursty-90rps-2s-3t"
+    assert pick_baseline([other], SERVE_POINT) is None
+    assert pick_baseline([other, SERVE_POINT], SERVE_POINT) is SERVE_POINT
+
+
+def test_serve_trace_roundtrip_through_main(tmp_path):
+    """End-to-end through the CLI: the committed-baseline flow the CI
+    job runs (clean pass, 2x-p99 failure, unmatched trace seeds)."""
+    def _write(name, obj):
+        p = tmp_path / name
+        p.write_text(json.dumps(obj))
+        return str(p)
+
+    base = _write("base.json", SERVE_POINT)
+    good = _write("good.json", SERVE_POINT)
+    worse = copy.deepcopy(SERVE_POINT)
+    worse["latency_ms"]["p99"] *= 2
+    bad = _write("bad.json", worse)
+    reshaped = copy.deepcopy(SERVE_POINT)
+    reshaped["trace_id"] = "seed1-poisson-10rps-1s-1t"
+    far = _write("far.json", reshaped)
+
+    assert main(["--candidate", good, "--baseline", base,
+                 "--tolerance", "0.75"]) == 0
+    assert main(["--candidate", bad, "--baseline", base,
+                 "--tolerance", "0.75"]) == 1
+    assert main(["--candidate", far, "--baseline", base]) == 0  # seeds anew
